@@ -1,0 +1,178 @@
+"""Roofline analysis (§Roofline): three terms per (arch × shape), from the
+dry-run's compiled artifacts.
+
+Reads results/dryrun_all.jsonl (written by ``python -m repro.launch.dryrun
+--all``), computes per single-pod cell:
+
+  compute_s    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16, v5e)
+  memory_s     = HLO_traffic_bytes / HBM_bw        (819 GB/s)
+  collective_s = Σ_k ring_factor·bytes_k / link_bw (~50 GB/s/link ICI)
+
+HLO_FLOPs / traffic / collective bytes are the **trip-count-scaled
+per-device** totals from launch/hlo_stats.py (XLA's cost_analysis counts
+while bodies once; see that module).  MODEL_FLOPS = 6·N_active·tokens for
+train, 2·N_active·tokens for prefill/decode, per device.  The dominant
+term is the bottleneck the §Perf loop iterates on; roofline_frac =
+compute_s / max(all terms) is the fraction-of-peak upper bound reported as
+the §Perf score.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.models import Model
+
+__all__ = ["roofline_rows", "render_markdown", "HW"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s
+    "link_bw": 50e9,  # bytes/s/link ICI
+}
+
+# Per-device time multipliers for ring algorithms (N→∞ limit).
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_ACTIVE_CACHE: dict[str, int] = {}
+
+
+def _active_params(arch: str) -> int:
+    if arch not in _ACTIVE_CACHE:
+        model = Model(get_config(arch))
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        _ACTIVE_CACHE[arch] = model.active_param_count(shapes)
+    return _ACTIVE_CACHE[arch]
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = _active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_chips
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens / n_chips
+
+
+def roofline_rows(jsonl_path: str, mesh: str = "16x16") -> list[dict]:
+    n_chips = 256 if mesh == "16x16" else 512
+    rows = []
+    for line in open(jsonl_path):
+        r = json.loads(line)
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                {"arch": r["arch"], "shape": r["shape"], "status": "skipped",
+                 "reason": r["reason"]}
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"], "status": "error"})
+            continue
+        compute_s = r["hlo_flops"] / HW["peak_flops"]
+        memory_s = r["hlo_traffic_bytes"] / HW["hbm_bw"]
+        coll_s = sum(
+            _COLL_FACTOR.get(k, 1.0) * v["bytes"] / HW["link_bw"]
+            for k, v in r["collectives_scaled"].items()
+        )
+        terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops_per_device(r["arch"], r["shape"], n_chips)
+        bound = max(terms.values())
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "status": "ok",
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": coll_s,
+                "dominant": dominant,
+                "model_flops": mf,
+                "hlo_flops": r["hlo_flops"],
+                "useful_ratio": mf / max(r["hlo_flops"], 1.0),
+                "roofline_frac": compute_s / bound if bound else 0.0,
+                "mfu_bound": (mf / HW["peak_flops"]) / bound if bound else 0.0,
+                "peak_gb": (
+                    r["memory"]["argument_bytes"]
+                    + r["memory"]["temp_bytes"]
+                    + r["memory"]["output_bytes"]
+                    - r["memory"]["alias_bytes"]
+                )
+                / 1e9,
+            }
+        )
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render_markdown(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO flops | MFU bound | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | "
+                f"({r['reason'][:40]}) |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        fits = "yes" if r["peak_gb"] <= 16 else f"NO {r['peak_gb']:.1f}GB"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound']*100:.1f}% | {fits} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = os.environ.get("DRYRUN_JSONL", "results/dryrun_all.jsonl")
+    if not os.path.exists(path):
+        print(f"# roofline: {path} not found — run the dry-run first")
+        return
+    rows = roofline_rows(path)
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,useful_ratio,mfu_bound,peak_gb")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},{r['status']},,,,,,")
+            continue
+        print(
+            f"{r['arch']},{r['shape']},{r['compute_s']:.4g},{r['memory_s']:.4g},"
+            f"{r['collective_s']:.4g},{r['dominant']},{r['useful_ratio']:.3f},"
+            f"{r['mfu_bound']:.3f},{r['peak_gb']:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per section, plus the section
+tables.  Sections:
+
+  table1    — paper Table I analog (coarse/fine runtimes + ME/s)
+  fig23     — paper Fig 2/3 analog (fine-over-coarse speedups + geomean)
+  imbalance — load-imbalance statistics (the paper's §III-A mechanism)
+  moe       — beyond-paper: coarse vs fine MoE dispatch
+  kernels   — Pallas kernel structural models + interpret-mode checks
+  roofline  — §Roofline terms per (arch × shape) from the dry-run JSONL
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title: str):
+    print(f"\n##### {title} " + "#" * max(1, 60 - len(title)), flush=True)
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    t_start = time.time()
+
+    if only in (None, "imbalance"):
+        _section("imbalance")
+        from repro.configs.ktruss import BENCH_GRAPHS
+        from repro.graphs import imbalance_stats
+
+        cols = None
+        for spec in BENCH_GRAPHS:
+            st = imbalance_stats(spec.build()).row()
+            if cols is None:
+                cols = list(st.keys())
+                print(",".join(cols))
+            print(",".join(f"{st[c]:.3g}" if isinstance(st[c], float) else str(st[c]) for c in cols))
+
+    if only in (None, "table1"):
+        _section("table1 (paper Table I analog, K=3)")
+        from . import ktruss_table
+
+        rows = ktruss_table.run_table()
+        cols = sorted({c for r in rows for c in r})
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r.get(c, "")) for c in cols))
+        for r in rows:
+            if r.get("support_ms_fe"):
+                print(
+                    f"bench,ktruss_fine_support_{r['graph']},"
+                    f"{r['support_ms_fe']*1e3:.0f},ME/s={r.get('me_s_fe')}"
+                )
+
+    if only in (None, "fig23"):
+        _section("fig23 (speedup fine/coarse + geomean)")
+        from . import ktruss_speedup
+
+        rows, geo = ktruss_speedup.run_speedup()
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+        print(f"geomean_speedup,{geo:.2f}")
+        print("paper_reference,CPU 1.48x / GPU 16.93x (K=3)")
+
+    if only in (None, "moe"):
+        _section("moe dispatch (beyond-paper)")
+        from . import moe_dispatch
+
+        rows = moe_dispatch.run_moe_dispatch()
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+
+    if only in (None, "kernels"):
+        _section("kernels (structural + interpret)")
+        from . import kernels_bench
+
+        for r in kernels_bench.kernel_structure_rows():
+            print(r)
+        for r in kernels_bench.run_kernel_bench():
+            print(r)
+
+    if only in (None, "roofline"):
+        _section("roofline (from dry-run artifacts)")
+        from . import roofline
+
+        roofline.main()
+
+    print(f"\n# total bench wall time: {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 2 analog: fine-over-coarse speedup tracks the imbalance statistic.
+
+Sweeps graph families (uniform grid → heavy-tail) and prints measured
+speedup next to the W/avg-degree prediction — the mechanism behind the
+paper's graph-dependent speedups (roadNet ≈ 1×, soc-* ≫ 1×).
+
+    PYTHONPATH=src python examples/ktruss_scaling.py
+"""
+
+import time
+
+import jax
+
+from repro.core import KTrussEngine
+from repro.graphs import barabasi, erdos, imbalance_stats, rmat, road
+
+
+def support_ms(engine) -> float:
+    fn = jax.jit(engine.support)
+    alive = engine.initial_alive()
+    fn(alive).block_until_ready()
+    t0 = time.perf_counter()
+    fn(alive).block_until_ready()
+    return (time.perf_counter() - t0) * 1e3
+
+
+def main() -> None:
+    graphs = [
+        road(48, 0.08, seed=1),  # uniform degree (roadNet regime)
+        erdos(3_000, 8.0, seed=2),  # near-uniform (p2p regime)
+        barabasi(3_000, 4, seed=3),  # heavy tail (oregon regime)
+        rmat(11, 6, seed=4),  # heavier tail (soc-* regime)
+    ]
+    print(f"{'graph':>14} {'maxdeg':>7} {'pred W/avg':>10} {'coarse ms':>10} "
+          f"{'fine ms':>8} {'speedup':>8}")
+    for g in graphs:
+        st = imbalance_stats(g)
+        pred = g.max_degree() / max(g.nnz / g.n, 1e-9)
+        c = support_ms(KTrussEngine(g, granularity="coarse"))
+        f = support_ms(KTrussEngine(g, granularity="fine"))
+        print(
+            f"{g.name:>14} {g.max_degree():>7} {pred:>10.1f} {c:>10.1f} "
+            f"{f:>8.1f} {c/f:>7.1f}x"
+        )
+    print("\nspeedup grows with the imbalance statistic — the paper's Fig. 2/3.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""The paper's decomposition applied to MoE expert routing (beyond-paper).
+
+Shows side by side, under growing router skew:
+  * coarse (per-expert capacity buckets = Alg. 2 row tasks): dropped tokens
+    grow with skew;
+  * fine (flat sorted buffer = Alg. 3 nonzero tasks): dropless.
+
+    PYTHONPATH=src python examples/moe_dispatch.py
+"""
+
+from benchmarks.moe_dispatch import run_moe_dispatch
+
+
+def main() -> None:
+    rows = run_moe_dispatch(tokens=2048)
+    print(f"{'skew':>6} {'dispatch':>8} {'ms':>8} {'drop%':>7} {'imbalance':>10}")
+    for r in rows:
+        print(
+            f"{r['skew']:>6} {r['dispatch']:>8} {r['ms_per_call']:>8} "
+            f"{100*r['drop_frac']:>6.1f}% {r['load_imbalance']:>9}x"
+        )
+    print(
+        "\nfine == the paper's flat nonzero task space; coarse == per-row "
+        "buckets.\nSame router, same experts — only the decomposition differs."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""gemma2-9b — dense, local+global alternating attention, logit softcaps.
+
+[arXiv:2408.00118; hf]  42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000.  head_dim=256 (explicit, not d_model/H); sliding window 4096
+on local layers; attn softcap 50, final softcap 30; GeGLU; sandwich norms;
+tied embeddings scaled by sqrt(d_model).
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256_000,
+    layer_pattern=("local", "global"),
+    sliding_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    embed_scale=True,
+    sandwich_norm=True,
+    act="gelu",
+    rope_theta=10_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    sliding_window=32,
+    attn_chunk=64,
+)

@@ -1,0 +1,38 @@
+"""internvl2-1b — VLM: InternViT frontend (stub) + qwen2-0.5b LM backbone.
+
+[arXiv:2404.16821; hf]  24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655.  The ViT supplies 256 patch embeddings per image as a stub
+(``input_specs`` provides them precomputed, per the assignment spec); the
+backbone matches qwen2-0.5b with the InternVL vocab.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_655,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    frontend_len=256,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    frontend_len=8,
+    attn_chunk=64,
+)

@@ -1,0 +1,55 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table entry).
+
+[arXiv:2501.kimi2; unverified]  61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384 experts top-8 (+1 shared expert, DeepSeek-style).
+head_dim=112 (= d_model/H).  All layers MoE per the assignment line (the
+HF K2 uses one leading dense layer; the assignment config takes precedence
+— recorded in DESIGN.md).  This is the flagship target for the paper's
+fine-grained dispatch: 384 experts × top-8 routing is maximal irregular
+parallelism.
+"""
+
+from ..models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab_size=163_840,
+    rope_theta=50_000.0,
+    # 1T params: bf16 master weights + int8 Adam moments are what make the
+    # 512-chip v5e fit close (DESIGN.md §7; EXPERIMENTS.md §Dry-run).
+    param_dtype="bfloat16",
+    moe=MoEConfig(
+        num_experts=384,
+        top_k=8,
+        d_ff_expert=2048,
+        num_shared_experts=1,
+        dispatch="fine",
+        first_dense=0,
+        period=1,
+    ),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=64,
+    vocab_size=503,
+    attn_chunk=64,
+    moe=MoEConfig(
+        num_experts=8,
+        top_k=2,
+        d_ff_expert=64,
+        num_shared_experts=1,
+        dispatch="fine",
+    ),
+)

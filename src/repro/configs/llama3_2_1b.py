@@ -1,0 +1,32 @@
+"""llama3.2-1b — small llama3 dense model.
+
+[hf:meta-llama/Llama-3.2-1B; unverified]  16L d_model=2048 32H (GQA kv=8)
+d_ff=8192 vocab=128256.  head_dim=64; rope theta 5e5; tied embeddings.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128_256,
+    tie_embeddings=True,
+    rope_theta=500_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    attn_chunk=64,
+)

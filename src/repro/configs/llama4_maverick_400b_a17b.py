@@ -1,0 +1,52 @@
+"""llama4-maverick-400b-a17b — MoE with early fusion, top-1 routing.
+
+[hf:meta-llama/Llama-4-Maverick-17B-128E; unverified]  48L d_model=5120
+40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts top-1 (+1 shared),
+MoE on every other layer (interleave step 2).  head_dim=128; rope 5e5.
+Top-1 routing is the Switch-style worst case for coarse dispatch imbalance
+— a primary subject for the paper's fine-grained decomposition.
+"""
+
+from ..models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202_048,
+    rope_theta=500_000.0,
+    param_dtype="bfloat16",
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=1,
+        d_ff_expert=8192,
+        num_shared_experts=1,
+        dispatch="fine",
+        first_dense=0,
+        period=2,
+    ),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    attn_chunk=64,
+    moe=MoEConfig(
+        num_experts=4,
+        top_k=1,
+        d_ff_expert=64,
+        num_shared_experts=1,
+        dispatch="fine",
+        period=2,
+    ),
+)

@@ -1,0 +1,42 @@
+"""recurrentgemma-9b — Griffin hybrid: RG-LRU + local attention (2:1).
+
+[arXiv:2402.19427; unverified]  38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000.  head_dim=256; pattern (rglru, rglru, attn) with the
+38 = 12×3 + 2 leftover handled by the stack's suffix path; local attention
+window 2048 → sub-quadratic, runs long_500k.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256_000,
+    layer_pattern=("rglru", "rglru", "local"),
+    sliding_window=2048,
+    rglru_width=4096,
+    conv1d_width=4,
+    tie_embeddings=True,
+    embed_scale=True,
+    act="gelu",
+    rope_theta=10_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=5,  # 1 group of 3 + 2 leftover: exercises the suffix path
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    sliding_window=32,
+    rglru_width=64,
+    attn_chunk=64,
+)

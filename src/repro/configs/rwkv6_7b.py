@@ -1,0 +1,34 @@
+"""rwkv6-7b — "Finch": attention-free, data-dependent decay linear RNN.
+
+[arXiv:2404.05892; hf]  32L d_model=4096 (attn-free) d_ff=14336
+vocab=65536.  64 heads of dim 64 in the WKV state; O(1) decode state →
+runs long_500k.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65_536,
+    layer_pattern=("rwkv",),
+    rwkv_head_dim=64,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    rwkv_head_dim=16,
+    attn_chunk=64,
+)

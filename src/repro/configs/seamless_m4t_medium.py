@@ -1,0 +1,42 @@
+"""seamless-m4t-medium — enc-dec multimodal (speech-to-text) backbone.
+
+[arXiv:2308.11596; hf]  12L d_model=1024 16H (GQA kv=16 = MHA) d_ff=4096
+vocab=256206.  Assignment: the transformer backbone only; the speech
+frontend is a stub (``input_specs`` supplies precomputed frame embeddings).
+We instantiate 12 encoder + 12 decoder layers (M4T's text decoder depth);
+the encoder consumes ``frontend_len`` = 1024 stub frames on serve shapes.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256_206,
+    encoder_layers=12,
+    encoder_pattern=("attn",),
+    layer_pattern=("attn",),
+    frontend="audio",
+    frontend_len=1024,
+    act="gelu",
+    rope_theta=10_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    frontend_len=8,
+    attn_chunk=64,
+)

@@ -1,0 +1,32 @@
+"""smollm-360m — llama-arch small dense model.
+
+[hf:HuggingFaceTB/SmolLM-360M; hf]  32L d_model=960 15H (GQA kv=5)
+d_ff=2560 vocab=49152.  head_dim=64; tied embeddings.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=49_152,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=60,
+    num_heads=3,
+    num_kv_heads=1,
+    head_dim=20,
+    d_ff=128,
+    vocab_size=503,
+    attn_chunk=64,
+)

@@ -1,0 +1,101 @@
+"""Coarse-grained parallel Eager K-truss support computation (Algorithm 2).
+
+One task per **row** (vertex) of the upper-triangular adjacency — the
+baseline decomposition of Low et al. that this paper's contribution
+replaces.  On vector hardware every row task is padded to the maximum
+degree in *both* the neighbor dimension and the per-neighbor window, so the
+work per chunk of C rows is ``C × W × W`` regardless of how sparse the rows
+actually are.  That padding waste is the SIMD/TPU manifestation of the
+thread-level load imbalance the paper measures (DESIGN.md §2), and the
+benchmarks report it side by side with the fine-grained version.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .eager_fine import FineProblem
+from .taskmap import sorted_window_member
+
+__all__ = ["support_coarse_eager"]
+
+
+def support_coarse_eager(
+    p: FineProblem, alive: jax.Array, *, window: int, row_chunk: int = 32
+) -> jax.Array:
+    """Support per directed edge via row-parallel eager updates (Alg. 2).
+
+    Args:
+      p: problem arrays (``prepare_fine`` — shared with the fine algorithm).
+      alive: (nnzp,) bool mask over directed edges.
+      window: static width ≥ max out-degree.
+      row_chunk: rows per scan step (memory scales with row_chunk·window²).
+
+    Returns:
+      (nnzp,) int32 support (0 on dead/pad lanes).
+    """
+    n, nnzp = p.n, p.nnz_pad
+    w = int(window)
+    c = int(row_chunk)
+    large = jnp.int32(n + 2)
+    offs = jnp.arange(w, dtype=jnp.int32)
+
+    num_chunks = (n + c - 1) // c
+
+    def body(s_acc: jax.Array, chunk_idx: jax.Array):
+        # 1-based row ids; rows beyond n map to the empty sentinel row 0.
+        v = chunk_idx * c + 1 + jnp.arange(c, dtype=jnp.int32)
+        v = jnp.where(v <= n, v, 0)
+
+        start = p.rowptr[jnp.maximum(v, 1) - 1] * (v > 0)  # (C,)
+        a_idx = start[:, None] + offs[None, :]  # (C, W) global slots
+        a_in = offs[None, :] < p.deg[v][:, None]
+        a_idx_c = jnp.clip(a_idx, 0, nnzp - 1)
+        a_vals = jnp.where(a_in, p.colidx[a_idx_c], 0)  # κ per (c, j)
+        a_alive = a_in & alive[a_idx_c]
+
+        # Row-κ windows for every j: (C, W, W).
+        kappa = a_vals
+        b_start = p.rowptr[jnp.maximum(kappa, 1) - 1] * (kappa > 0)  # (C, W)
+        b_idx = b_start[:, :, None] + offs[None, None, :]
+        b_in = offs[None, None, :] < p.deg[kappa][:, :, None]
+        b_idx_c = jnp.clip(b_idx, 0, nnzp - 1)
+        b_nav = jnp.where(b_in, p.colidx[b_idx_c], large)
+        b_alive = b_in & alive[b_idx_c]
+
+        # Suffix queries: task (c, j) intersects a_vals[c, j+1:] with row κ.
+        task_ok = a_alive  # edge (v_c, κ_j) itself must be alive
+        suffix = offs[None, None, :] > offs[None, :, None]  # w > j
+        q = jnp.where(
+            suffix & a_alive[:, None, :] & task_ok[:, :, None],
+            a_vals[:, None, :],
+            0,
+        )  # (C, W, W): queries for task (c, j)
+
+        member, pos = sorted_window_member(
+            q.reshape(c * w, w), b_nav.reshape(c * w, w)
+        )
+        member = member.reshape(c, w, w)
+        pos_c = jnp.minimum(pos.reshape(c, w, w), w - 1)
+        member &= jnp.take_along_axis(b_alive, pos_c, axis=2, mode="clip")
+        ones = member.astype(jnp.int32)
+
+        # u1: edge (v, κ_j) gains the intersection count.
+        u1_tgt = jnp.where(task_ok, a_idx_c, nnzp)
+        s_acc = s_acc.at[u1_tgt.reshape(-1)].add(
+            jnp.sum(ones, axis=2).reshape(-1), mode="drop"
+        )
+        # u2: matched suffix entries (edges (v, m)).
+        u2_tgt = jnp.where(jnp.any(member, axis=1), a_idx_c, nnzp)
+        s_acc = s_acc.at[u2_tgt.reshape(-1)].add(
+            jnp.sum(ones, axis=1).reshape(-1), mode="drop"
+        )
+        # u3: matched row-κ entries (edges (κ, m)).
+        u3_tgt = jnp.where(member, b_start[:, :, None] + pos_c, nnzp)
+        s_acc = s_acc.at[u3_tgt.reshape(-1)].add(ones.reshape(-1), mode="drop")
+        return s_acc, None
+
+    s0 = jnp.zeros(nnzp, jnp.int32)
+    s_final, _ = jax.lax.scan(body, s0, jnp.arange(num_chunks, dtype=jnp.int32))
+    return s_final

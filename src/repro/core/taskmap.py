@@ -1,0 +1,122 @@
+"""Flat-task index mathematics — the paper's core device, factored out.
+
+The fine-grained Eager K-truss iterates a *flat* range ``t ∈ [0, nnz)`` and
+recovers each task's row from the CSR row pointers (the Kokkos
+``RangePolicy`` + implicit CSR task encoding of §III-D).  The identical index
+math shows up in every load-balanced irregular dispatch:
+
+* K-truss: task ``t`` is the t-th nonzero; its row is
+  ``searchsorted(rowptr, t, 'right')``.
+* MoE fine-grained dispatch: "rows" are experts, "nonzeros" are routed
+  tokens; group boundaries come from a sort + the same searchsorted.
+* Ragged paged-KV gathers in serving.
+
+These helpers are shared by ``repro.core`` (the paper's algorithm) and
+``repro.models.moe`` (the beyond-paper application).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "row_of_task",
+    "window_gather",
+    "batched_searchsorted",
+    "sorted_window_member",
+    "segment_offsets",
+]
+
+
+def row_of_task(rowptr: jax.Array, t: jax.Array) -> jax.Array:
+    """Recover the 1-based row id of flat task(s) ``t``.
+
+    ``rowptr`` is the (n+1,) CSR row-pointer array over 1-based rows: row v
+    spans ``[rowptr[v-1], rowptr[v])``.  This is the paper's flat-range to
+    row mapping, vectorized as one binary search per task.
+    """
+    return jnp.searchsorted(rowptr, t, side="right").astype(jnp.int32)
+
+
+def window_gather(
+    flat: jax.Array, starts: jax.Array, width: int, fill
+) -> jax.Array:
+    """Gather fixed-width windows ``flat[starts[e] : starts[e]+width]``.
+
+    Out-of-range lanes read ``fill``.  Shapes: starts (E,) -> out (E, width).
+    This is the static-shape stand-in for the paper's pointer-delimited CSR
+    sub-vectors: every task sees a dense, identically-shaped working set.
+    """
+    offs = jnp.arange(width, dtype=jnp.int32)[None, :]
+    idx = starts[:, None].astype(jnp.int32) + offs
+    valid = (idx >= 0) & (idx < flat.shape[0])
+    vals = flat[jnp.clip(idx, 0, flat.shape[0] - 1)]
+    return jnp.where(valid, vals, fill)
+
+
+def batched_searchsorted(b: jax.Array, q: jax.Array) -> jax.Array:
+    """Row-wise ``searchsorted(b[e], q[e], side='left')`` without vmap.
+
+    Branchless binary search unrolled to ``ceil(log2(Wb + 1))`` steps of
+    take-along-axis + compare-select — the exact schedule the Pallas kernel
+    uses on TPU (VREG-friendly: no data-dependent control flow).
+
+    Args:
+      b: (E, Wb) ascending per row.
+      q: (E, Wq) query values.
+
+    Returns:
+      (E, Wq) int32 insertion positions in ``[0, Wb]``.
+    """
+    wb = b.shape[1]
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, wb, jnp.int32)
+    big = jnp.iinfo(b.dtype).max
+    steps = max(1, int(np.ceil(np.log2(wb + 1))))
+    for _ in range(steps):
+        mid = (lo + hi) >> 1
+        bm = jnp.take_along_axis(b, jnp.clip(mid, 0, wb - 1), axis=1, mode="clip")
+        # Out-of-range probes (lo == hi == wb) must never move lo further.
+        bm = jnp.where(mid >= wb, big, bm)
+        go_right = bm < q
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    return lo
+
+
+def sorted_window_member(
+    a: jax.Array, b: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Membership of each a-lane in the sorted window b (per row).
+
+    Args:
+      a: (E, Wa) query values (invalid lanes must be < 1, e.g. the 0
+         sentinel — vertex ids are 1-based).
+      b: (E, Wb) ascending windows (invalid lanes must be a +inf-like
+         sentinel strictly greater than any valid id).
+
+    Returns:
+      member: (E, Wa) bool — a[e,w] appears in b[e,:].
+      pos:    (E, Wa) int32 — position of the match in b (undefined where
+              ``member`` is False; callers must mask).
+    """
+    pos = batched_searchsorted(b, a)
+    safe = jnp.minimum(pos, b.shape[1] - 1)
+    hit = jnp.take_along_axis(b, safe, axis=1, mode="clip") == a
+    member = hit & (a >= 1) & (pos < b.shape[1])
+    return member, pos
+
+
+def segment_offsets(sorted_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Boundaries of equal-id runs in a sorted id array.
+
+    Returns (num_segments + 1,) offsets such that segment s spans
+    ``[off[s], off[s+1])`` — the inverse of :func:`row_of_task`, used by the
+    MoE fine-grained dispatch to build its "rowptr" after sorting tokens by
+    expert.
+    """
+    return jnp.searchsorted(
+        sorted_ids, jnp.arange(num_segments + 1, dtype=sorted_ids.dtype)
+    ).astype(jnp.int32)

@@ -1,0 +1,201 @@
+"""K-truss driver: support → prune fixed-point loop, K_max search, public API.
+
+This is the system's user-facing entry to the paper's algorithm:
+
+    engine = KTrussEngine(graph, granularity="fine", mode="eager")
+    res = engine.ktruss(k=3)           # alive mask + supports + iterations
+    kmax = engine.kmax()               # largest non-empty truss
+
+``granularity`` selects the paper's axis of study:
+  * ``"coarse"`` — Algorithm 2 (row tasks; the baseline).
+  * ``"fine"``   — Algorithm 3 (nonzero tasks; the contribution).
+``mode`` selects the update dataflow (``"eager"`` scatter vs ``"owner"``
+collision-free; DESIGN.md §4), and ``backend`` selects XLA ops or the
+Pallas TPU kernels (interpret-mode on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from .eager_coarse import support_coarse_eager
+from .eager_fine import (
+    FineProblem,
+    bucket_tasks,
+    prepare_fine,
+    support_fine_bucketed,
+    support_fine_eager,
+    support_fine_owner,
+)
+
+__all__ = ["KTrussResult", "KTrussEngine", "make_support_fn"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class KTrussResult:
+    k: int
+    alive: np.ndarray  # (nnz,) bool over the graph's real edges
+    support: np.ndarray  # (nnz,) int32 (post-prune supports)
+    iterations: int
+    edges_remaining: int
+
+
+def make_support_fn(
+    p: FineProblem,
+    *,
+    granularity: str = "fine",
+    mode: str = "eager",
+    backend: str = "xla",
+    window: int,
+    chunk: int = 1024,
+    row_chunk: int = 32,
+) -> Callable[[jax.Array], jax.Array]:
+    """Build ``alive -> support`` for one decomposition/dataflow/backend."""
+    if backend == "pallas":
+        from ..kernels import ops as kernel_ops  # lazy: keeps core dep-free
+
+        if granularity != "fine":
+            raise ValueError("pallas backend implements the fine granularity")
+        return functools.partial(
+            kernel_ops.support_fine, p, window=window, chunk=chunk
+        )
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
+    if granularity == "coarse":
+        if mode != "eager":
+            raise ValueError("coarse granularity implements the eager mode")
+        return functools.partial(
+            support_coarse_eager, p, window=window, row_chunk=row_chunk
+        )
+    if granularity != "fine":
+        raise ValueError(f"unknown granularity {granularity!r}")
+    if mode == "eager":
+        return functools.partial(support_fine_eager, p, window=window, chunk=chunk)
+    if mode == "owner":
+        return functools.partial(support_fine_owner, p, window=window, chunk=chunk)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+class KTrussEngine:
+    """Compiled K-truss solver for one graph (static shapes reused per k)."""
+
+    def __init__(
+        self,
+        g: CSRGraph,
+        *,
+        granularity: str = "fine",
+        mode: str = "eager",
+        backend: str = "xla",
+        window: int | None = None,
+        chunk: int = 1024,
+        row_chunk: int | None = None,
+        max_iters: int = 1_000,
+        bucketed: bool = False,
+    ):
+        self.g = g
+        self.granularity = granularity
+        self.mode = mode
+        self.backend = backend
+        self.bucketed = bucketed
+        self.problem = prepare_fine(g, chunk=chunk)
+        max_out = g.max_degree()
+        max_und = int(g.undirected_csr().max_degree())
+        need = max_und if (mode == "owner" or backend == "pallas") else max_out
+        self.window = int(window) if window is not None else max(8, _round_up(need, 8))
+        self.chunk = chunk
+        # Keep the coarse chunk's (C, W, W) working set near ~2^24 lanes.
+        self.row_chunk = (
+            int(row_chunk)
+            if row_chunk is not None
+            else max(1, min(64, (1 << 24) // max(1, self.window**2)))
+        )
+        self.max_iters = max_iters
+        if bucketed:
+            if granularity != "fine" or mode != "eager" or backend != "xla":
+                raise ValueError("bucketed requires fine/eager/xla")
+            buckets = [
+                (wb, jnp.asarray(ids))
+                for wb, ids in bucket_tasks(g, chunk=min(chunk, 256))
+            ]
+            self._support = functools.partial(
+                support_fine_bucketed,
+                self.problem,
+                buckets=buckets,
+                chunk=min(chunk, 256),
+            )
+        else:
+            self._support = make_support_fn(
+                self.problem,
+                granularity=granularity,
+                mode=mode,
+                backend=backend,
+                window=self.window,
+                chunk=chunk,
+                row_chunk=self.row_chunk,
+            )
+        self._fixed_point = jax.jit(self._fixed_point_impl, static_argnums=(1,))
+
+    # ------------------------------------------------------------------ #
+    def support(self, alive: jax.Array) -> jax.Array:
+        """One support computation (no pruning) — benchmark entry point."""
+        return self._support(alive)
+
+    def initial_alive(self) -> jax.Array:
+        return jnp.asarray(self.problem.colidx != 0)
+
+    def _fixed_point_impl(self, alive0: jax.Array, k: int):
+        thresh = jnp.int32(k - 2)
+
+        def cond(state):
+            _, _, changed, it = state
+            return changed & (it < self.max_iters)
+
+        def body(state):
+            alive, _, _, it = state
+            s = self._support(alive)
+            new_alive = alive & (s >= thresh)
+            changed = jnp.any(new_alive != alive)
+            return new_alive, s * new_alive.astype(s.dtype), changed, it + 1
+
+        state = (alive0, jnp.zeros_like(alive0, jnp.int32), jnp.asarray(True), 0)
+        alive, s, _, it = jax.lax.while_loop(cond, body, state)
+        return alive, s, it
+
+    # ------------------------------------------------------------------ #
+    def ktruss(self, k: int, alive0: jax.Array | None = None) -> KTrussResult:
+        alive0 = self.initial_alive() if alive0 is None else alive0
+        alive, s, it = self._fixed_point(alive0, int(k))
+        alive_np = np.asarray(alive)[: self.g.nnz]
+        return KTrussResult(
+            k=int(k),
+            alive=alive_np,
+            support=np.asarray(s)[: self.g.nnz],
+            iterations=int(it),
+            edges_remaining=int(alive_np.sum()),
+        )
+
+    def kmax(self, k_start: int = 3) -> tuple[int, list[KTrussResult]]:
+        """Largest k with non-empty truss, warm-starting each k from k-1."""
+        results: list[KTrussResult] = []
+        alive = self.initial_alive()
+        k, kmax = k_start, 0
+        while bool(np.asarray(alive).any()):
+            res = self.ktruss(k, alive0=alive)
+            if res.edges_remaining:
+                kmax = k
+                results.append(res)
+            pad = self.problem.nnz_pad - self.g.nnz
+            alive = jnp.asarray(np.pad(res.alive, (0, pad)))
+            k += 1
+        return kmax, results

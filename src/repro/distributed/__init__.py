@@ -1,0 +1,25 @@
+"""Distributed substrate: sharding rules, elastic meshes."""
+
+from .elastic import derive_mesh, mesh_shape_for, spare_devices
+from .sharding import (
+    MeshAxes,
+    batch_specs,
+    logits_spec,
+    mesh_axes,
+    named,
+    param_specs,
+    state_specs,
+)
+
+__all__ = [
+    "derive_mesh",
+    "mesh_shape_for",
+    "spare_devices",
+    "MeshAxes",
+    "batch_specs",
+    "logits_spec",
+    "mesh_axes",
+    "named",
+    "param_specs",
+    "state_specs",
+]

@@ -1,0 +1,166 @@
+"""Trace-time sharding context: how model code learns about the mesh.
+
+Model definitions stay mesh-agnostic; distributed layers (MoE expert
+parallelism) consult this context at *trace* time.  The launcher enters
+``sharding_context(mesh)`` around jit/lower, and ``moe_apply`` picks the
+shard_map EP path iff a context with a model axis is active.
+
+Why a context and not a parameter: the mesh is orthogonal to the model's
+math and threading it through every ``apply`` signature couples all layers
+to distribution concerns; this is the pattern MaxText uses via its global
+mesh, made explicit and scoped.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator
+
+from jax.sharding import Mesh
+
+__all__ = ["ShardCtx", "sharding_context", "current_shard_ctx"]
+
+_ACTIVE: list["ShardCtx"] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    model_axis: str = "model"
+    dp_axes: tuple[str, ...] = ("data",)
+    fsdp_axes: tuple[str, ...] = ("data",)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh | None) -> Iterator[ShardCtx | None]:
+    """Activate a sharding context (None = explicit single-device scope)."""
+    if mesh is None:
+        yield None
+        return
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    ctx = ShardCtx(mesh=mesh, model_axis="model", dp_axes=dp, fsdp_axes=dp)
+    _ACTIVE.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _ACTIVE.pop()
+
+
+def current_shard_ctx() -> ShardCtx | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain_cache(x):
+    """Pin a (B, S, KV, dh) cache block's sharding inside the layer scan.
+
+    The decode layer-scan's stacked cache outputs (ys) otherwise lose the
+    model-axis sharding chosen by state_specs and materialize dp-only
+    (kimi decode_32k: 61 × 470 MB = 28.7 GB/device — EXPERIMENTS §Perf).
+    Mirrors the state_specs KV candidates with divisibility fallbacks.
+    """
+    ctx = current_shard_ctx()
+    if ctx is None or x.ndim != 4:
+        return x
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = ctx.dp_axes
+    mdl = ctx.model_axis
+    dp_size = int(np.prod([ctx.mesh.shape[a] for a in dp])) if dp else 1
+    m_size = ctx.mesh.shape[mdl]
+    b, s, kv, dh = x.shape
+    batch = dp if (dp and b % dp_size == 0) else None
+    if kv % m_size == 0:
+        spec = P(batch, None, mdl, None)
+    elif dh % m_size == 0:
+        spec = P(batch, None, None, mdl)
+    elif s % m_size == 0:
+        spec = P(batch, mdl, None, None)
+    else:
+        spec = P(batch, None, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_seq(x):
+    """Megatron-style sequence-parallel residual: (B, S, D) sharded on S
+    over the model axis.  Applied at layer-group boundaries for the giant
+    MoE archs so the per-layer saved activation stacks (bf16 + the f32
+    copies XLA pre-converts for the backward) shard 16× instead of
+    replicating over 'model' (kimi train: 10.8 GB of stacks — §Perf).
+    XLA inserts the all-gather (body entry) / reduce-scatter (body exit)
+    pair this implies — the standard SP collective trade.
+    """
+    ctx = current_shard_ctx()
+    if ctx is None or x.ndim != 3:
+        return x
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = ctx.dp_axes
+    m = ctx.model_axis
+    dp_size = int(np.prod([ctx.mesh.shape[a] for a in dp])) if dp else 1
+    if x.shape[1] % ctx.mesh.shape[m]:
+        return constrain_batch(x)
+    batch = dp if (dp and x.shape[0] % dp_size == 0) else None
+    spec = P(batch, m, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_heads(x):
+    """Pin a (B, S, H, dh) attention operand: batch on DP, heads on the
+    model axis when divisible, head_dim NEVER sharded.
+
+    Used on q/k after RoPE: the KV-cache's fallback dh-sharding otherwise
+    back-propagates into the score einsum's contraction (iteration 12),
+    while a plain batch-only pin would *replicate the heads* and cost
+    head-parallel attention 16× redundant compute (iteration 13).
+    """
+    ctx = current_shard_ctx()
+    if ctx is None or x.ndim != 4:
+        return x
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = ctx.dp_axes
+    m = ctx.model_axis
+    dp_size = int(np.prod([ctx.mesh.shape[a] for a in dp])) if dp else 1
+    batch = dp if (dp and x.shape[0] % dp_size == 0) else None
+    heads = m if x.shape[2] % ctx.mesh.shape[m] == 0 else None
+    spec = P(batch, None, heads, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_batch(x):
+    """Anchor an activation's leading (batch) dim to the DP axes.
+
+    GSPMD's einsum conflict resolution can silently *replicate* the batch
+    when FSDP shards a weight's contraction dim on the same mesh axes that
+    shard the batch (observed: full-batch f32 attention scores + an
+    all-reduce over 'model' in the smollm dry-run — EXPERIMENTS §Perf).
+    Explicit with_sharding_constraint at stream boundaries pins the batch
+    sharding so the partitioner all-gathers weights (ZeRO-3 semantics)
+    instead of activations.  No-op outside a sharding context or when the
+    batch doesn't divide.
+    """
+    ctx = current_shard_ctx()
+    if ctx is None or ctx.dp_axes == ():
+        return x
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = ctx.dp_axes
+    size = int(np.prod([ctx.mesh.shape[a] for a in dp]))
+    if x.ndim == 0 or x.shape[0] % size:
+        return x
+    spec = P(dp, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

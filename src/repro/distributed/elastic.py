@@ -1,0 +1,64 @@
+"""Elastic mesh derivation + checkpoint resharding (fault tolerance).
+
+At 1000+ nodes, failures leave you with a different device count than you
+started with.  Elasticity here is two mechanisms:
+
+  * :func:`derive_mesh` — given whatever devices survive, build the largest
+    well-formed (data, model) or (pod, data, model) mesh (model axis kept
+    at the configured TP width when possible; data axis absorbs the rest;
+    leftover devices idle as hot spares).
+  * checkpoint restore with resharding — ``repro.train.checkpoint`` stores
+    host-side arrays + the spec tree; restoring onto a *different* mesh
+    simply re-applies the sharding rules for the new mesh (the rules are
+    divisibility-aware, so a smaller model axis re-fits automatically).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["derive_mesh", "mesh_shape_for", "spare_devices"]
+
+
+def mesh_shape_for(
+    n: int, *, model_width: int = 16, pod_size: int | None = 256
+) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Pure planning function: (shape, axis_names) for ``n`` devices.
+
+    Shrinks ``model_width`` by powers of two until it divides n (elastic
+    downscale); uses the 3-axis pod layout when ≥ 2 full pods survive.
+    """
+    width = model_width
+    while width > 1 and n % width:
+        width //= 2
+    n_cells = n // width
+    if pod_size and n >= 2 * pod_size and pod_size % width == 0:
+        per_pod = pod_size // width
+        pods = n_cells // per_pod
+        return (pods, per_pod, width), ("pod", "data", "model")
+    return (n_cells, width), ("data", "model")
+
+
+def derive_mesh(
+    devices=None,
+    *,
+    model_width: int = 16,
+    pod_size: int | None = 256,
+) -> Mesh:
+    """Largest well-formed mesh from the available devices."""
+    devices = jax.devices() if devices is None else list(devices)
+    shape, names = mesh_shape_for(
+        len(devices), model_width=model_width, pod_size=pod_size
+    )
+    used = int(np.prod(shape))
+    arr = np.array(devices[:used]).reshape(shape)
+    return Mesh(arr, names)
+
+
+def spare_devices(mesh: Mesh, devices=None) -> list:
+    """Devices not included in the mesh — the hot-spare pool."""
+    devices = jax.devices() if devices is None else list(devices)
+    used = {d.id for d in mesh.devices.flatten()}
+    return [d for d in devices if d.id not in used]

@@ -1,0 +1,286 @@
+"""Sharding rules: parameter/activation/state PartitionSpecs for any mesh.
+
+Strategy (DESIGN.md §7) on mesh axes ('pod', 'data', 'model'):
+
+  * DP   : batch over ('pod', 'data')                      — "dp"
+  * FSDP : parameter d_model-ish dims over ('pod', 'data') — "fsdp"
+  * TP   : heads / d_ff / expert dim over 'model'
+  * EP   : MoE expert dim over 'model' (TP-style expert parallelism)
+  * SP   : long-context caches over 'model' when batch = 1
+
+Rules are *divisibility-aware with ordered fallbacks*: each parameter kind
+lists candidate layouts; the first whose sharded dims divide evenly by the
+mesh axes wins, otherwise the dim falls back (e.g. qwen2's 14 heads don't
+split 16-way → shard head_dim instead; seamless' 256206 vocab doesn't split
+→ shard d_model).  This is what lets ONE rule set drive all 10 assigned
+architectures on the 16×16 and 2×16×16 production meshes.
+
+Scanned layer stacks (params under a ``scan`` key) get a leading ``None``
+axis for the group dimension automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshAxes",
+    "mesh_axes",
+    "param_specs",
+    "batch_specs",
+    "state_specs",
+    "logits_spec",
+    "named",
+    "spec_tree_to_shardings",
+]
+
+
+class MeshAxes:
+    """Resolved roles of the mesh's named axes."""
+
+    def __init__(self, mesh: Mesh):
+        names = mesh.axis_names
+        self.mesh = mesh
+        self.model = "model" if "model" in names else None
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        self.dp: tuple[str, ...] | None = dp or None
+        self.fsdp: tuple[str, ...] | None = dp or None
+        # mesh.shape works for both Mesh and AbstractMesh (spec planning).
+        self.sizes = dict(mesh.shape)
+
+    def size(self, role) -> int:
+        if role is None:
+            return 1
+        axes = role if isinstance(role, tuple) else (role,)
+        return int(np.prod([self.sizes[a] for a in axes]))
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    return MeshAxes(mesh)
+
+
+def _resolve(ax: MeshAxes, role):
+    """Map the logical role ('fsdp'|'model'|'dp'|None) to mesh axis names."""
+    if role is None:
+        return None
+    if role == "fsdp":
+        return ax.fsdp
+    if role == "dp":
+        return ax.dp
+    if role == "model":
+        return ax.model
+    raise ValueError(role)
+
+
+def _fits(ax: MeshAxes, shape: Sequence[int], template) -> bool:
+    for dim, role in zip(shape, template):
+        axes = _resolve(ax, role)
+        if axes is None:
+            continue
+        if dim % ax.size(axes) != 0:
+            return False
+    return True
+
+
+def _first_fit(ax: MeshAxes, shape: Sequence[int], candidates) -> P:
+    for template in candidates:
+        if len(template) != len(shape):
+            continue
+        if _fits(ax, shape, template):
+            return P(*(_resolve(ax, r) for r in template))
+    return P()  # fully replicated fallback
+
+
+# Parameter-kind rules: (match fn over path keys, candidate templates).
+# Later entries in each candidate list are progressively less sharded.
+def _param_candidates(keys: tuple[str, ...], ndim: int):
+    ks = set(keys)
+    last = keys[-1] if keys else ""
+    joined = "/".join(keys)
+
+    if last == "embedding":
+        # Never shard the gathered (d_model) dim: SPMD's gather partitioning
+        # of a last-dim-sharded table emits invalid dynamic-slices under
+        # scan+jvp (observed on XLA:CPU 0.8; see DESIGN.md §7 fallbacks).
+        return [("model", "fsdp"), ("fsdp", None), (None, None)]
+    if "head" in ks and last == "kernel":
+        return [("fsdp", "model"), ("fsdp", None), (None, None)]
+    if "moe" in ks:
+        if last in ("gate", "up"):
+            return [("model", "fsdp", None), (None, "fsdp", "model"), (None, None, None)]
+        if last == "down":
+            return [("model", None, "fsdp"), (None, "model", "fsdp"), (None, None, None)]
+        if "router" in ks:
+            return [("fsdp", None), (None, None)]
+        # shared expert falls through to the ffn rules below
+    if last == "kernel" and ks & {"q", "k", "v"} and ndim == 3:
+        # Shard heads or REPLICATE — never shard head_dim: a dh-sharded
+        # K against a head-sharded Q turns every flash chunk's scores into
+        # a partial-sum all-reduce (gemma2 prefill measured 21k all-reduces
+        # = 11.6 TB/device — EXPERIMENTS §Perf iteration 8).  Replicated
+        # K/V projections are small (GQA kv ≤ 16).
+        return [
+            ("fsdp", "model", None),
+            ("fsdp", None, None),
+            (None, None, None),
+        ]
+    if last == "bias" and ndim == 2:
+        return [("model", None), (None, "model"), (None, None)]
+    if last == "kernel" and "o" in ks:
+        return [("model", "fsdp"), (None, "fsdp"), (None, None)]
+    if last == "kernel" and ks & {"gate", "up", "in_x", "in_gate"}:
+        return [("fsdp", "model"), ("fsdp", None), (None, None)]
+    if last == "kernel" and "down" in ks:
+        return [("model", "fsdp"), (None, "fsdp"), (None, None)]
+    if last == "kernel" and ks & {"gate_a", "gate_x"}:
+        return [(None, "model"), (None, None)]
+    if last == "kernel" and "out" in ks:
+        return [("model", "fsdp"), (None, "fsdp"), (None, None)]
+    if last == "conv_w":
+        return [(None, "model"), (None, None)]
+    if last == "lambda":
+        return [("model",), (None,)]
+    # RWKV mixers: time-mix r/k/v/g are (D, D) column-parallel; channel-mix
+    # k is (D, F) column-parallel and v is (F, D) row-parallel.
+    if last == "kernel" and ks & {"r", "g"} and ndim == 2:
+        return [("fsdp", "model"), ("fsdp", None), (None, None)]
+    if last == "kernel" and "k" in ks and ndim == 2:
+        return [("fsdp", "model"), ("fsdp", None), (None, None)]
+    if last == "kernel" and "v" in ks and ndim == 2:
+        if "ffn" in ks:  # channel-mix v: (F, D) row-parallel
+            return [("model", "fsdp"), (None, "fsdp"), (None, None)]
+        return [("fsdp", "model"), ("fsdp", None), (None, None)]
+    if last == "lora_down" or (last == "kernel" and "lora_down" in ks):
+        return [("fsdp", None), (None, None)]
+    if last == "lora_up":
+        return [(None, None, "model"), (None, None, None)]
+    if last == "wlora_up":
+        return [(None, "model"), (None, None)]
+    # 1-D params (norm scales, u, w0, mu, conv_b, biases): replicate.
+    return [tuple(None for _ in range(ndim))]
+
+
+def _path_keys(path) -> tuple[str, ...]:
+    keys = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            keys.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            keys.append(f"[{e.idx}]")
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            keys.append(str(e.name))
+    return tuple(keys)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    ax = mesh_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        keys = _path_keys(path)
+        # int8-quantized moment leaves ({'q','scale'} under the param key,
+        # optimizer.py): rule-match on the parent parameter's keys — 'q'
+        # has the param's exact shape; 'scale' replaces the last dim by the
+        # (small, usually indivisible) block count, so its last dim must
+        # not be sharded.
+        is_scale = False
+        if keys and keys[-1] in ("q", "scale") and ("m" in keys or "v" in keys):
+            is_scale = keys[-1] == "scale"
+            keys = keys[:-1]
+        shape = tuple(leaf.shape)
+        scanned = "scan" in keys
+        eff_shape = shape[1:] if scanned else shape
+        cands = _param_candidates(keys, len(eff_shape))
+        if is_scale:
+            cands = [tuple(c[:-1]) + (None,) for c in cands]
+        spec = _first_fit(ax, eff_shape, cands)
+        if scanned:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Batch arrays: dim 0 over DP axes (falls back to replicated)."""
+    ax = mesh_axes(mesh)
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        if ax.dp is not None and shape[0] % ax.size(ax.dp) == 0:
+            return P(ax.dp, *(None,) * (len(shape) - 1))
+        return P()
+
+    return jax.tree.map(leaf_spec, batch)
+
+
+def _state_candidates(keys: tuple[str, ...], ndim: int):
+    last = keys[-1] if keys else ""
+    ks = set(keys)
+    if last in ("k", "v") and ndim == 4:  # KV cache (B, S, KV, dh)
+        return [
+            ("dp", None, "model", None),
+            ("dp", None, None, "model"),
+            ("dp", "model", None, None),  # SP cache: heads/dh indivisible
+            ("dp", None, None, None),
+            (None, "model", None, None),  # SP: batch=1 long-context cache
+            (None, None, None, "model"),
+            (None, None, None, None),
+        ]
+    if last == "s" and ndim == 4:  # RWKV state (B, H, dh, dh)
+        return [
+            ("dp", "model", None, None),
+            (None, "model", None, None),
+            (None, None, None, None),
+        ]
+    if last == "h" and ndim == 2:  # RG-LRU state (B, R)
+        return [("dp", "model"), (None, "model"), (None, None)]
+    if last == "conv" and ndim == 3:  # conv tail (B, w-1, R)
+        return [("dp", None, "model"), (None, None, "model"), (None, None, None)]
+    if last in ("x_prev_t", "x_prev_c") and ndim == 2:
+        return [("dp", None), (None, "model"), (None, None)]
+    if last == "enc_out" and ndim == 3:
+        return [("dp", None, None), (None, "model", None), (None, None, None)]
+    if last == "pos":
+        return [()]
+    return [tuple(None for _ in range(ndim))]
+
+
+def state_specs(states: Any, mesh: Mesh) -> Any:
+    """Decode-state pytree specs (caches, recurrent states)."""
+    ax = mesh_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        scanned = "scan" in keys
+        eff = shape[1:] if scanned else shape
+        spec = _first_fit(ax, eff, _state_candidates(keys, len(eff)))
+        if scanned:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, states)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    ax = mesh_axes(mesh)
+    return P(ax.dp) if ax.dp else P()
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return named(mesh, spec_tree)

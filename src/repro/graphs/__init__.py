@@ -1,0 +1,23 @@
+"""Graph substrate: CSR containers, generators, imbalance statistics."""
+
+from .csr import CSRGraph, DeviceCSR, build_upper_csr, from_edges
+from .generators import barabasi, clustered, erdos, rmat, road, suite, SUITE_SPECS
+from .stats import ImbalanceStats, coarse_task_work, fine_task_work, imbalance_stats
+
+__all__ = [
+    "CSRGraph",
+    "DeviceCSR",
+    "build_upper_csr",
+    "from_edges",
+    "barabasi",
+    "clustered",
+    "erdos",
+    "rmat",
+    "road",
+    "suite",
+    "SUITE_SPECS",
+    "ImbalanceStats",
+    "coarse_task_work",
+    "fine_task_work",
+    "imbalance_stats",
+]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+Every kernel in this package has a reference here with identical
+input/output semantics; the test suite sweeps shapes/dtypes and asserts
+``assert_allclose(kernel(interpret=True), ref)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["support_tiles_ref", "support_dense_ref"]
+
+
+def support_tiles_ref(
+    a_nav: jax.Array,
+    a_ok: jax.Array,
+    b_nav: jax.Array,
+    b_ok: jax.Array,
+) -> jax.Array:
+    """Per-edge sorted-window intersection counts (owner-mode support).
+
+    Args:
+      a_nav: (E, W) int32 — query window per edge (invalid lanes hold a
+        sentinel ≥ LARGE; they are excluded via ``a_ok``).
+      a_ok:  (E, W) bool — query lane validity (structural ∧ alive).
+      b_nav: (E, W) int32 — ascending navigation window (invalid = LARGE).
+      b_ok:  (E, W) bool — membership lane validity of ``b_nav``.
+
+    Returns:
+      (E,) int32 — |{w : a_ok[e,w] ∧ ∃w': b_nav[e,w'] == a_nav[e,w] ∧ b_ok[e,w']}|
+    """
+    # O(W²) dense equality — deliberately the most literal semantics.
+    eq = a_nav[:, :, None] == b_nav[:, None, :]
+    eq &= a_ok[:, :, None] & b_ok[:, None, :]
+    return jnp.sum(jnp.any(eq, axis=2), axis=1).astype(jnp.int32)
+
+
+def support_dense_ref(u_sym: jax.Array) -> jax.Array:
+    """Dense linear-algebraic support: S = (U @ U) ∘ U (Algorithm 1)."""
+    return (u_sym @ u_sym) * u_sym

@@ -1,0 +1,10 @@
+"""Launch: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``dryrun`` is intentionally not imported here — it must set XLA_FLAGS
+before jax initializes and is only ever run as ``python -m
+repro.launch.dryrun``.
+"""
+
+from .mesh import make_production_mesh, mesh_device_count
+
+__all__ = ["make_production_mesh", "mesh_device_count"]

@@ -1,0 +1,335 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU upcasts bf16 dot operands to f32 and then LICM hoists the
+    # converted *weight stacks* out of scan loops — an emulation artifact
+    # that inflates the per-device memory report by 2× param bytes (kimi
+    # decode: 30 GB -> 9.2 GB temp with the pass off).  TPU executes bf16
+    # dots natively, so the hoisted f32 copies do not exist on the target;
+    # disabling the pass makes the fit report faithful to v5e.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+THE two lines above must execute before any other import (jax locks the
+device count on first init) — do not move them.
+
+For each cell this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs the cell's entry point (train_step / prefill_step /
+     decode_step) with the execution plan (grad-accum, moment dtype,
+     remat) chosen for that (arch, shape),
+  3. ``jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)``
+     with ShapeDtypeStruct inputs — **no arrays are allocated**,
+  4. ``.compile()`` — sharding mismatches, unpartitionable ops, or compile
+     OOM fail here and are bugs in the system,
+  5. records ``memory_analysis()`` (proves the per-device fit) and
+     ``cost_analysis()`` + the collective ops parsed from the compiled HLO
+     (feeds benchmarks/roofline.py and EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import ARCH_NAMES, SHAPES, cell_is_valid, get_config, input_specs  # noqa: E402
+from ..distributed import batch_specs, named, param_specs, state_specs  # noqa: E402
+from ..distributed.context import sharding_context  # noqa: E402
+from ..models import Model  # noqa: E402
+from ..train import AdamWConfig, TrainStepConfig, make_train_step  # noqa: E402
+from ..train.optimizer import adamw_init  # noqa: E402
+from .hlo_stats import analyze_hlo  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+
+# ---------------------------------------------------------------------- #
+# Execution plans: how each (arch, shape) cell is configured to fit.
+# ---------------------------------------------------------------------- #
+def exec_plan(cfg, shape, mesh) -> dict:
+    """Per-cell knobs (microbatching, moment precision) chosen by napkin
+    math over HBM (16 GB/chip v5e); recorded in EXPERIMENTS.md §Dry-run."""
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]))
+    plan = {"moment_dtype": "float32", "accum_dtype": "float32", "grad_accum": 1}
+    if shape.kind != "train":
+        return plan
+    per_dev_seqs = max(1, shape.global_batch // dp)
+    # Microbatch sized from the activation budget: the remat boundary
+    # stack is L × b_micro × S × D × 2B ≤ ~4 GB.  Bigger microbatches cut
+    # grad-accum trips — each trip re-all-gathers the FSDP weight shards
+    # (gemma2 at accum=16 measured 567 GB/device of weight gathers; §Perf).
+    layers = cfg.num_layers + cfg.encoder_layers
+    stack_per_seq = layers * shape.seq_len * cfg.d_model * 2
+    # Cap at 4 seqs: beyond that, attention/frontend transients (which
+    # scale with the microbatch) dominate the boundary-stack estimate
+    # (seamless/internvl regressed to 33/21 GB uncapped — §Perf iter 13).
+    target = max(1, min(4, int(4e9 // max(stack_per_seq, 1))))
+    # accum must divide the per-device batch (the microbatch reshape):
+    # pick the fewest trips whose microbatch fits the activation budget.
+    accum = per_dev_seqs
+    for a in range(1, per_dev_seqs + 1):
+        if per_dev_seqs % a == 0 and per_dev_seqs // a <= target:
+            accum = a
+            break
+    plan["grad_accum"] = accum
+    big = cfg.moe is not None and cfg.moe.num_experts >= 64
+    if big:
+        plan["moment_dtype"] = "int8"
+        plan["accum_dtype"] = "bfloat16"
+    return plan
+
+
+def _collectives(hlo_text: str) -> dict:
+    """Sum per-device bytes by collective kind from compiled HLO."""
+    dtype_bytes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+        "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    }
+    out: dict[str, dict] = {}
+    pat = re.compile(
+        r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^ ]*))\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\("
+    )
+    shape_pat = re.compile(r"(\w+?)\[([\d,]*)\]")
+    for m in pat.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in shape_pat.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * dtype_bytes[dt]
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def _spec_to_jsonable(x):
+    return float(x) if isinstance(x, (int, float, np.floating)) else x
+
+
+def top_shapes(hlo_text: str, k: int = 12) -> list[tuple[float, str, str]]:
+    """Largest result tensors in the compiled module (fit debugging)."""
+    dtype_bytes = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "s8": 1, "pred": 1,
+                   "f64": 8, "s64": 8, "f16": 2, "u8": 1}
+    out = []
+    pat = re.compile(r"%([\w\.\-]+) = (\w+)\[([\d,]+)\][^ ]* (\w[\w\-]*)\(")
+    for m in pat.finditer(hlo_text):
+        name, dt, dims, op = m.groups()
+        if dt not in dtype_bytes:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        out.append((n * dtype_bytes[dt], f"{dt}[{dims}]", op))
+    out.sort(reverse=True)
+    seen, uniq = set(), []
+    for b, shape, op in out:
+        if (shape, op) in seen:
+            continue
+        seen.add((shape, op))
+        uniq.append((b, shape, op))
+        if len(uniq) >= k:
+            break
+    return uniq
+
+
+def build_and_lower(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_valid(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    plan = exec_plan(cfg, shape, mesh)
+    t0 = time.time()
+
+    with sharding_context(mesh):
+        specs = input_specs(cfg, shape)
+        if shape.kind == "train":
+            tcfg = TrainStepConfig(
+                optimizer=AdamWConfig(moment_dtype=plan["moment_dtype"]),
+                grad_accum=plan["grad_accum"],
+                accum_dtype=plan["accum_dtype"],
+            )
+            step = make_train_step(model, tcfg)
+            key = jax.random.PRNGKey(0)
+            state_shapes = jax.eval_shape(
+                lambda: {
+                    "params": model.init(key),
+                    "opt": adamw_init(
+                        jax.eval_shape(model.init, key), tcfg.optimizer
+                    ),
+                    "step": jax.ShapeDtypeStruct((), jax.numpy.int32),
+                }
+            )
+            state_sh = named(mesh, param_specs(state_shapes, mesh))
+            batch_sh = named(mesh, batch_specs(specs, mesh))
+            metric_sh = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()),
+                jax.eval_shape(step, state_shapes, specs)[1],
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metric_sh),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shapes, specs)
+        elif shape.kind == "prefill":
+            key = jax.random.PRNGKey(0)
+            pshapes = jax.eval_shape(model.init, key)
+            psh = named(mesh, param_specs(pshapes, mesh))
+            batch_sh = named(mesh, batch_specs(specs, mesh))
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, max_len=shape.seq_len)
+
+            out_state = jax.eval_shape(prefill_step, pshapes, specs)[1]
+            out_sh = (
+                NamedSharding(mesh, P()),
+                named(mesh, state_specs(out_state, mesh)),
+            )
+            jitted = jax.jit(
+                prefill_step, in_shardings=(psh, batch_sh), out_shardings=out_sh
+            )
+            lowered = jitted.lower(pshapes, specs)
+        else:  # decode
+            key = jax.random.PRNGKey(0)
+            pshapes = jax.eval_shape(model.init, key)
+            psh = named(mesh, param_specs(pshapes, mesh))
+            st_sh = named(mesh, state_specs(specs["states"], mesh))
+            tok_sh = named(mesh, batch_specs({"t": specs["token"]}, mesh))["t"]
+
+            def decode_step(params, token, states, pos):
+                return model.decode(params, token, states, pos)
+
+            out_sh = (NamedSharding(mesh, P()), st_sh)
+            jitted = jax.jit(
+                decode_step,
+                in_shardings=(psh, tok_sh, st_sh, NamedSharding(mesh, P())),
+                out_shardings=out_sh,
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                pshapes, specs["token"], specs["states"], specs["pos"]
+            )
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = _collectives(hlo)  # raw (once-per-body) counts, for reference
+    stats = analyze_hlo(hlo)  # trip-count-scaled totals (roofline inputs)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "plan": plan,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "cost": {
+            "flops_once": _spec_to_jsonable(cost.get("flops", 0.0)),
+            "bytes_accessed_once": _spec_to_jsonable(cost.get("bytes accessed", 0.0)),
+            "transcendentals_once": _spec_to_jsonable(
+                cost.get("transcendentals", 0.0)
+            ),
+        },
+        # Trip-count-scaled per-device totals (launch/hlo_stats.py):
+        "hlo_flops": stats["flops"],
+        "hlo_traffic_bytes": stats["traffic"],
+        "collectives_scaled": stats["collectives"],
+        "collectives_raw": coll,
+    }
+    if _PRINT_BIGBUF:
+        result["top_tensors"] = [
+            {"gb": round(b / 1e9, 3), "shape": s, "op": o}
+            for b, s, o in top_shapes(hlo)
+        ]
+    return result
+
+
+_PRINT_BIGBUF = False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument(
+        "--multi-pod", default="both", choices=["single", "multi", "both"]
+    )
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument(
+        "--bigbuf", action="store_true", help="also print the largest tensors"
+    )
+    args = ap.parse_args()
+    global _PRINT_BIGBUF
+    _PRINT_BIGBUF = args.bigbuf
+
+    archs = list(ARCH_NAMES) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod
+    ]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                try:
+                    res = build_and_lower(arch, shape_name, mp)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    res = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    n_fail += 1
+                line = json.dumps(res)
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

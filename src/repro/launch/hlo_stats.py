@@ -1,0 +1,215 @@
+"""Trip-count-aware HLO accounting for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — a 10-trip scan reports the same flops as a single call), so a
+scan-over-layers train step under-reports flops by ~L×grad_accum.  This
+module parses ``compiled.as_text()`` instead:
+
+  * dot flops        = 2 × |output| × |contracting dims|, resolved from the
+    per-computation symbol table (operand result types),
+  * while loops      scale their body by ``backend_config known_trip_count``
+    (XLA records it for counted loops; unknown → 1 and flagged),
+  * collective bytes = operand/result bytes × ring factor, × enclosing trip
+    counts (a collective inside the layer scan costs L× its single shot),
+  * HBM traffic      ≈ Σ (output + resolvable operand bytes) per op × trips
+    — an upper estimate (ignores on-chip reuse); used for the memory term.
+
+Elementwise flops are excluded (≤ few % of LM step flops, dominated by
+dots); transcendentals likewise.  Methodology recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterable
+
+__all__ = ["analyze_hlo", "HLO_COLLECTIVES"]
+
+HLO_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s+(?:ROOT )?%([\w\.\-]+) = ((?:\([^)]*\))|(?:[\w\[\],\{\}]+))\s+([\w\-]+)\("
+)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_CALLED = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: list[str] | None = None
+    for line in text.splitlines():
+        if line and not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = comps.setdefault(m.group(1), [])
+                continue
+        if line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            cur.append(line)
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    """Returns totals: flops, collective bytes per kind, traffic bytes."""
+    comps = _split_computations(text)
+
+    # Symbol tables: per computation, op name -> result type string.
+    symbols: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        tab: dict[str, str] = {}
+        for line in lines:
+            m = _OP_LINE.match(line)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        symbols[cname] = tab
+
+    skip_ops = {
+        "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+        "after-all", "iota",
+    }
+
+    memo: dict[tuple[str, bool], dict] = {}
+
+    def comp_cost(cname: str, in_fusion: bool = False) -> dict:
+        key = (cname, in_fusion)
+        if key in memo:
+            return memo[key]
+        # Mark in-progress to break cycles defensively.
+        memo[key] = {"flops": 0.0, "traffic": 0.0, "coll": {}}
+        tab = symbols.get(cname, {})
+        flops = 0.0
+        traffic = 0.0
+        coll: dict[str, dict] = {}
+
+        for line in comps.get(cname, []):
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            name, rtype, op = m.group(1), m.group(2), m.group(3)
+            if op in skip_ops:
+                continue
+            out_bytes = _shape_bytes(rtype)
+
+            if op == "dot":
+                out_dims = _shape_dims(rtype)
+                # contraction size from the lhs operand's shape
+                ops_m = _OPERANDS.findall(line.split("dot(", 1)[1])
+                lhs_shape: list[int] = []
+                if ops_m:
+                    lhs_type = tab.get(ops_m[0], "")
+                    lhs_shape = _shape_dims(lhs_type)
+                cm = _CONTRACT.search(line)
+                csize = 1
+                if cm and lhs_shape:
+                    for d in cm.group(1).split(","):
+                        if d and int(d) < len(lhs_shape):
+                            csize *= lhs_shape[int(d)]
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                flops += 2.0 * out_n * csize
+                if not in_fusion:
+                    traffic += out_bytes
+                    for oname in ops_m[:2]:
+                        traffic += _shape_bytes(tab.get(oname, ""))
+            elif op == "while":
+                tm = _TRIP.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                bm = _CALLED.search(line)
+                if bm:
+                    sub = comp_cost(bm.group(1), in_fusion)
+                    flops += trips * sub["flops"]
+                    traffic += trips * sub["traffic"]
+                    for k, v in sub["coll"].items():
+                        rec = coll.setdefault(k, {"count": 0, "bytes": 0.0})
+                        rec["count"] += trips * v["count"]
+                        rec["bytes"] += trips * v["bytes"]
+                cm2 = _COND.search(line)
+                if cm2:
+                    sub = comp_cost(cm2.group(1), in_fusion)
+                    flops += trips * sub["flops"]
+            elif (op[:-6] if op.endswith("-start") else op) in HLO_COLLECTIVES:
+                kind = op[:-6] if op.endswith("-start") else op
+                rec = coll.setdefault(kind, {"count": 0, "bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes"] += out_bytes
+                traffic += out_bytes
+            elif op in ("fusion", "call", "conditional", "custom-call", "map",
+                        "reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+                # Ops inside a fused computation read/write VMEM/registers,
+                # not HBM — only the fusion's boundary (its output and the
+                # already-counted producer outputs it consumes) is traffic.
+                sub_fused = op != "call"
+                for sub_name in _CALLED.findall(line):
+                    sub = comp_cost(sub_name, in_fusion or sub_fused)
+                    flops += sub["flops"]
+                    traffic += sub["traffic"]
+                    for k, v in sub["coll"].items():
+                        rec = coll.setdefault(k, {"count": 0, "bytes": 0.0})
+                        rec["count"] += v["count"]
+                        rec["bytes"] += v["bytes"]
+                if not in_fusion:
+                    traffic += out_bytes
+            else:
+                if not in_fusion:
+                    traffic += out_bytes
+
+        result = {"flops": flops, "traffic": traffic, "coll": coll}
+        memo[cname] = result
+        return result
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        return {"flops": 0.0, "traffic": 0.0, "collectives": {}}
+    total = comp_cost(entry)
+    return {
+        "flops": total["flops"],
+        "traffic": total["traffic"],
+        "collectives": total["coll"],
+    }

@@ -1,0 +1,23 @@
+"""Production mesh construction (assignment-prescribed topology).
+
+Defined as functions (never module-level constants) so importing this
+module does not touch JAX device state — the dry-run must set XLA_FLAGS
+*before* any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_device_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_device_count(*, multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

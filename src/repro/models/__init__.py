@@ -1,0 +1,6 @@
+"""Model substrate: layers, blocks, and the 10 assigned architectures."""
+
+from .config import ModelConfig, MoEConfig
+from .registry import Model
+
+__all__ = ["ModelConfig", "MoEConfig", "Model"]

@@ -1,0 +1,239 @@
+"""Attention: RoPE, chunked (flash-style) softmax, GQA/MQA, windows, caches.
+
+One attention implementation serves every assigned architecture:
+
+* GQA/MQA via an explicit (kv_heads, q_per_kv) head layout.
+* Online-softmax over KV chunks (``lax.scan``) so the (Sq, Skv) score matrix
+  is never materialized — required for prefill_32k / train_4k to fit HBM.
+* ``window`` masks relative distance (gemma2 local layers, recurrentgemma's
+  bounded local attention — this is what makes those archs long_500k-legal).
+* ``softcap`` = gemma2 logit soft-capping: cap·tanh(logits/cap).
+* Decode uses the same kernel with Sq == 1 against a cache; sliding-window
+  layers use a ring cache of ``window`` slots (absolute positions are
+  reconstructed arithmetically from the write cursor — no position array).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import (
+    constrain_batch,
+    constrain_cache,
+    constrain_heads,
+    current_shard_ctx,
+)
+from .common import dense, dense_init
+from .config import ModelConfig
+from .flash import flash_attention
+
+__all__ = [
+    "rope",
+    "chunked_attention",
+    "attn_init",
+    "attn_apply",
+    "init_cache",
+    "KVCache",
+]
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Skv, KV, Dh)
+    v: jax.Array,  # (B, Skv, KV, Dh)
+    *,
+    scale: float,
+    causal: bool,
+    q_positions: jax.Array,  # (Sq,) absolute positions
+    kv_positions: jax.Array,  # (Skv,) absolute positions (-1 = invalid slot)
+    window: int | None,
+    softcap: float | None,
+    chunk: int,
+) -> jax.Array:
+    """Flash attention (models/flash.py): online-softmax forward, chunked-
+    recompute custom-VJP backward. Returns (B, Sq, H, Dh)."""
+    return flash_attention(
+        q,
+        k,
+        v,
+        scale=scale,
+        causal=causal,
+        q_positions=q_positions,
+        kv_positions=kv_positions,
+        window=window,
+        softcap=softcap,
+        chunk=chunk,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# GQA attention layer
+# ---------------------------------------------------------------------- #
+def attn_init(key: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "q": dense_init(kq, d, (h, dh), bias=cfg.qkv_bias, dtype=dt),
+        "k": dense_init(kk, d, (kvh, dh), bias=cfg.qkv_bias, dtype=dt),
+        "v": dense_init(kv, d, (kvh, dh), bias=cfg.qkv_bias, dtype=dt),
+        "o": dense_init(ko, h * dh, d, dtype=dt),
+    }
+
+
+class KVCache(dict):
+    """Per-layer cache: {'k': (B, Sc, KV, Dh), 'v': ..., 'pos': scalar}."""
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, window: int | None, dtype
+) -> dict:
+    sc = max_len if window is None else min(window, max_len)
+    kvh, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, sc, kvh, dh), dtype),
+        "v": jnp.zeros((batch, sc, kvh, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cache_positions(pos: jax.Array, s_cache: int, ring: bool) -> jax.Array:
+    """Absolute position held by each cache slot (-1 if not yet written)."""
+    slots = jnp.arange(s_cache, dtype=jnp.int32)
+    if not ring:
+        return jnp.where(slots < pos, slots, -1)
+    # Ring: slot s holds the largest p < pos with p ≡ s (mod s_cache).
+    p = pos - 1 - ((pos - 1 - slots) % s_cache)
+    return jnp.where((p >= 0) & (pos > 0), p, -1)
+
+
+def attn_apply(
+    p: dict,
+    x: jax.Array,  # (B, Sq, D)
+    *,
+    cfg: ModelConfig,
+    positions: jax.Array,  # (Sq,) absolute positions of x
+    window: int | None,
+    causal: bool = True,
+    use_rope: bool = True,
+    cache: dict | None = None,
+    kv_x: jax.Array | None = None,  # cross-attention memory (B, Skv, D)
+) -> tuple[jax.Array, dict | None]:
+    """GQA attention; optionally reads/updates a decode cache.
+
+    Modes:
+      * self-attention, no cache: k/v from x (train / encoder).
+      * self-attention + cache: append x's k/v at ``cache['pos']`` (ring
+        for windowed layers), attend over the cache (prefill & decode).
+      * cross-attention (kv_x given): k/v from kv_x, no cache, no causal.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    b, sq, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    scale = cfg.attn_scale if cfg.attn_scale is not None else dh**-0.5
+
+    q = constrain_batch(dense(p["q"], x, dt))  # (B, Sq, H, Dh)
+    src = x if kv_x is None else kv_x
+    k = constrain_batch(dense(p["k"], src, dt))
+    v = constrain_batch(dense(p["v"], src, dt))
+
+    if use_rope and kv_x is None:
+        # Re-pin after RoPE: the KV-cache write's sharding (e.g. a
+        # dh-sharded cache when kv-heads don't divide the axis) otherwise
+        # back-propagates through rope into the score einsum's contraction
+        # dim — 7.7k score all-reduces = 4.1 TB on smollm prefill
+        # (EXPERIMENTS §Perf iterations 12-13).  Heads stay model-sharded
+        # when divisible; head_dim never.
+        q = constrain_heads(rope(q, positions, cfg.rope_theta))
+        k = constrain_heads(rope(k, positions, cfg.rope_theta))
+
+    new_cache = None
+    if kv_x is not None:
+        kv_pos = jnp.arange(src.shape[1], dtype=jnp.int32)
+        causal, window = False, None
+    elif cache is None:
+        kv_pos = positions.astype(jnp.int32)
+    else:
+        sc = cache["k"].shape[1]
+        ring = window is not None and sc == window
+        pos0 = cache["pos"]
+        new_pos = pos0 + sq
+        if sq == 1:
+            # Decode: append to the cache, attend over the cache.
+            slot = (positions.astype(jnp.int32) % sc) if ring else positions
+            ck = constrain_cache(
+                cache["k"].at[:, slot].set(k.astype(cache["k"].dtype))
+            )
+            cv = constrain_cache(
+                cache["v"].at[:, slot].set(v.astype(cache["v"].dtype))
+            )
+            new_cache = {"k": ck, "v": cv, "pos": new_pos}
+            kv_pos = _cache_positions(new_pos, sc, ring)
+            k, v = ck, cv
+        else:
+            # Prefill: attend over the prompt's own K/V (early queries need
+            # positions a ring would have already evicted) and persist only
+            # the last ``sc`` entries — writing all S positions into an
+            # S > window ring would hit duplicate slots (undefined order).
+            kv_pos = positions.astype(jnp.int32)
+            tail = min(sq, sc)
+            kk = k[:, -tail:]
+            vv = v[:, -tail:]
+            pp = positions[-tail:].astype(jnp.int32)
+            slot = (pp % sc) if ring else pp
+            ck = constrain_cache(
+                cache["k"].at[:, slot].set(kk.astype(cache["k"].dtype))
+            )
+            cv = constrain_cache(
+                cache["v"].at[:, slot].set(vv.astype(cache["v"].dtype))
+            )
+            new_cache = {"k": ck, "v": cv, "pos": new_pos}
+
+    # Bound the per-chunk f32 score tensor (B_local·Sq·H·C·4B) to ~512 MB
+    # per device: at 32k prefill × 64 heads a fixed 512-wide chunk costs
+    # 4.3 GB/chunk.  Trace-time shapes are global; divide by the DP degree.
+    ctx = current_shard_ctx()
+    dp_size = 1
+    if ctx is not None:
+        for a in ctx.dp_axes:
+            dp_size *= ctx.mesh.shape[a]
+    b_loc = max(1, b // dp_size)
+    budget = 1 << 29
+    per_c = max(1, b_loc * sq * h * 4)
+    chunk = max(128, min(cfg.attn_chunk, budget // per_c))
+    out = chunked_attention(
+        q,
+        k,
+        v,
+        scale=scale,
+        causal=causal,
+        q_positions=positions.astype(jnp.int32),
+        kv_positions=kv_pos,
+        window=window,
+        softcap=cfg.attn_logit_softcap,
+        chunk=chunk,
+    )
+    # Pin the attention output before the o-projection: the o-kernel's
+    # 'model' (row-parallel) sharding otherwise propagates backward through
+    # the reshape into the flash scan when H doesn't divide the axis but
+    # H·Dh does (smollm's 15×64=960: 7,776 score all-reduces = 4.1 TB;
+    # EXPERIMENTS §Perf iteration 12).
+    out = constrain_batch(out.reshape(b, sq, h * dh))
+    return dense(p["o"], out, dt), new_cache

@@ -1,0 +1,381 @@
+"""Transformer/recurrent blocks + pattern-aware scan-over-layers stacking.
+
+A *block* = (norms, sequence mixer, FFN-or-MoE).  Mixer kinds:
+
+  ``attn``   full causal attention          ``local``  sliding-window attn
+  ``global`` full attention (gemma2 pair)   ``rglru``  Griffin recurrence
+  ``rwkv``   RWKV-6 time mixing (its channel mix replaces the FFN)
+
+Layer stacking compiles one XLA body per repeating *group* via ``lax.scan``
+(weights stacked on a leading group axis — the MaxText trick that keeps
+512-device compile times bounded).  Non-periodic prefixes/suffixes (e.g.
+kimi's first dense layer, recurrentgemma's 38 = 12×3 + 2) run unscanned.
+Per-layer decode state (KV caches / recurrent states) is threaded through
+the scan as stacked xs/ys.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import constrain_batch, constrain_seq
+from .attention import attn_apply, attn_init, init_cache
+from .common import rmsnorm, rmsnorm_init
+from .config import ModelConfig
+from .ffn import ffn_apply, ffn_init
+from .moe import moe_apply, moe_init
+from .rglru import rglru_apply, rglru_init, rglru_init_state
+from .rwkv6 import (
+    rwkv_channel_apply,
+    rwkv_channel_init,
+    rwkv_init_state,
+    rwkv_time_apply,
+    rwkv_time_init,
+)
+
+__all__ = [
+    "block_init",
+    "block_apply",
+    "block_init_state",
+    "stack_init",
+    "stack_apply",
+    "stack_init_states",
+    "layer_plan",
+    "AUX_KEYS",
+]
+
+AUX_KEYS = ("moe_aux_loss", "moe_z_loss", "moe_drop_frac")
+
+
+def _zero_aux() -> dict:
+    return {k: jnp.float32(0.0) for k in AUX_KEYS}
+
+
+def _add_aux(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------- #
+# Single block
+# ---------------------------------------------------------------------- #
+def block_init(
+    key: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    use_moe: bool,
+    *,
+    cross: bool = False,
+) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": rmsnorm_init(d, dt), "ln2": rmsnorm_init(d, dt)}
+    if cfg.sandwich_norm:
+        p["ln1_post"] = rmsnorm_init(d, dt)
+        p["ln2_post"] = rmsnorm_init(d, dt)
+    if kind in ("attn", "local", "global"):
+        p["mixer"] = attn_init(k1, cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_init(k1, cfg)
+    elif kind == "rwkv":
+        p["mixer"] = rwkv_time_init(k1, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cross:
+        p["ln_cross"] = rmsnorm_init(d, dt)
+        p["cross"] = attn_init(k3, cfg, cross=True)
+    if kind == "rwkv":
+        p["ffn"] = rwkv_channel_init(k2, cfg)
+    elif use_moe:
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        p["ffn"] = ffn_init(k2, cfg)
+    return p
+
+
+def block_init_state(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype
+) -> dict:
+    if kind in ("attn", "global"):
+        return {"cache": init_cache(cfg, batch, max_len, window=None, dtype=dtype)}
+    if kind == "local":
+        return {
+            "cache": init_cache(
+                cfg, batch, max_len, window=cfg.sliding_window, dtype=dtype
+            )
+        }
+    if kind == "rglru":
+        return {"rec": rglru_init_state(cfg, batch, dtype)}
+    if kind == "rwkv":
+        return {"rec": rwkv_init_state(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def block_apply(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    kind: str,
+    positions: jax.Array,
+    state: dict | None,
+    causal: bool = True,
+    enc_out: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None, dict]:
+    """Returns (x, new_state, aux)."""
+    aux = _zero_aux()
+    new_state = dict(state) if state is not None else None
+
+    x = constrain_batch(x)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "local", "global"):
+        window = cfg.sliding_window if kind == "local" else None
+        cache = state.get("cache") if state is not None else None
+        h, new_cache = attn_apply(
+            p["mixer"],
+            h,
+            cfg=cfg,
+            positions=positions,
+            window=window,
+            causal=causal,
+            cache=cache,
+        )
+        if new_state is not None:
+            new_state["cache"] = new_cache
+    elif kind == "rglru":
+        h, rec = rglru_apply(
+            p["mixer"], h, cfg=cfg, state=state.get("rec") if state else None
+        )
+        if new_state is not None:
+            new_state["rec"] = rec
+    elif kind == "rwkv":
+        h, rec = rwkv_time_apply(
+            p["mixer"], h, cfg=cfg, state=state.get("rec") if state else None
+        )
+        if new_state is not None:
+            new_state["rec"] = rec
+    if cfg.sandwich_norm:
+        h = rmsnorm(p["ln1_post"], h, cfg.norm_eps)
+    x = constrain_batch(x + h)
+
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        h, _ = attn_apply(
+            p["cross"],
+            h,
+            cfg=cfg,
+            positions=positions,
+            window=None,
+            causal=False,
+            kv_x=enc_out,
+        )
+        x = x + h
+
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        h, rec2 = rwkv_channel_apply(
+            p["ffn"], h, cfg=cfg, state=state.get("rec") if state else None
+        )
+        if new_state is not None and rec2 is not None:
+            new_state["rec"] = dict(new_state["rec"], x_prev_c=rec2["x_prev_c"])
+    elif "moe" in p:
+        b, s, d = h.shape
+        y2d, moe_aux = moe_apply(p["moe"], h.reshape(b * s, d), cfg)
+        h = y2d.reshape(b, s, d)
+        aux = _add_aux(
+            aux, {k: moe_aux.get(k, jnp.float32(0.0)) for k in AUX_KEYS}
+        )
+    else:
+        h = ffn_apply(p["ffn"], h, cfg)
+    if cfg.sandwich_norm:
+        h = rmsnorm(p["ln2_post"], h, cfg.norm_eps)
+    x = constrain_batch(x + h)
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------- #
+# Layer plan: prefix + scanned periodic groups + suffix
+# ---------------------------------------------------------------------- #
+def layer_plan(cfg: ModelConfig, kinds: tuple[str, ...]) -> dict:
+    """Split layer indices into (prefix, n_groups × period, suffix)."""
+    n = len(kinds)
+    sigs = [(kinds[i], cfg.uses_moe(i)) for i in range(n)]
+    period = len(cfg.layer_pattern)
+    if cfg.moe is not None:
+        period = math.lcm(period, cfg.moe.period)
+    none_plan = {"prefix": list(range(n)), "groups": 0, "period": period, "suffix": []}
+    if not cfg.scan_layers or n < 2 * period:
+        return none_plan
+    start = None
+    for s in range(0, min(period, n) + 1):
+        body = sigs[s:]
+        if all(body[i] == body[i % period] for i in range(len(body))):
+            start = s
+            break
+    if start is None:
+        return none_plan
+    groups = (n - start) // period
+    suffix_start = start + groups * period
+    return {
+        "prefix": list(range(start)),
+        "groups": groups,
+        "period": period,
+        "group_kinds": [kinds[start + j] for j in range(period)],
+        "group_moe": [cfg.uses_moe(start + j) for j in range(period)],
+        "scan_start": start,
+        "suffix": list(range(suffix_start, n)),
+    }
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_init(
+    key: jax.Array,
+    cfg: ModelConfig,
+    kinds: tuple[str, ...],
+    *,
+    cross: bool = False,
+) -> dict:
+    """Init all blocks, stacking the periodic groups for lax.scan."""
+    plan = layer_plan(cfg, kinds)
+    n = len(kinds)
+    lkeys = jax.random.split(key, max(n, 1))
+
+    def mk(i: int) -> dict:
+        return block_init(lkeys[i], cfg, kinds[i], cfg.uses_moe(i), cross=cross)
+
+    params: dict[str, Any] = {
+        "prefix": [mk(i) for i in plan["prefix"]],
+        "suffix": [mk(i) for i in plan["suffix"]],
+    }
+    if plan["groups"]:
+        per_group = [
+            [mk(plan["scan_start"] + g * plan["period"] + j) for j in range(plan["period"])]
+            for g in range(plan["groups"])
+        ]
+        params["scan"] = _stack(per_group)
+    return params
+
+
+def stack_init_states(
+    cfg: ModelConfig, kinds: tuple[str, ...], batch: int, max_len: int, dtype
+) -> dict:
+    plan = layer_plan(cfg, kinds)
+    states: dict[str, Any] = {
+        "prefix": [
+            block_init_state(cfg, kinds[i], batch, max_len, dtype)
+            for i in plan["prefix"]
+        ],
+        "suffix": [
+            block_init_state(cfg, kinds[i], batch, max_len, dtype)
+            for i in plan["suffix"]
+        ],
+    }
+    if plan["groups"]:
+        per_group = [
+            [
+                block_init_state(cfg, plan["group_kinds"][j], batch, max_len, dtype)
+                for j in range(plan["period"])
+            ]
+            for _ in range(plan["groups"])
+        ]
+        states["scan"] = _stack(per_group)
+    return states
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def stack_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    kinds: tuple[str, ...],
+    positions: jax.Array,
+    states: dict | None = None,
+    causal: bool = True,
+    enc_out: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None, dict]:
+    """Apply the full layer stack. Returns (x, new_states, aux-sums)."""
+    plan = layer_plan(cfg, kinds)
+    aux_tot = _zero_aux()
+    new_states: dict[str, Any] | None = (
+        {"prefix": [], "suffix": []} if states is not None else None
+    )
+
+    def run(block_p, xx, kind, st):
+        return block_apply(
+            block_p,
+            xx,
+            cfg=cfg,
+            kind=kind,
+            positions=positions,
+            state=st,
+            causal=causal,
+            enc_out=enc_out,
+        )
+
+    for slot, i in enumerate(plan["prefix"]):
+        st = states["prefix"][slot] if states is not None else None
+        x, nst, aux = run(params["prefix"][slot], x, kinds[i], st)
+        if new_states is not None:
+            new_states["prefix"].append(nst)
+        aux_tot = _add_aux(aux_tot, aux)
+
+    if plan["groups"]:
+        group_kinds = plan["group_kinds"]
+
+        def group_body(xx, gp, gst):
+            nst_list = []
+            aux_g = _zero_aux()
+            for j in range(plan["period"]):
+                st = gst[j] if gst is not None else None
+                xx, nst, aux = run(gp[j], xx, group_kinds[j], st)
+                nst_list.append(nst)
+                aux_g = _add_aux(aux_g, aux)
+            if cfg.seq_shard_boundary:
+                xx = constrain_seq(xx)  # SP residuals (DESIGN §7, §Perf)
+            return xx, nst_list, aux_g
+
+        body = _remat(group_body, cfg)
+
+        if states is None:
+            def scan_no_state(xx, gp):
+                xx, _, aux_g = body(xx, gp, None)
+                return xx, aux_g
+
+            x, aux_s = jax.lax.scan(scan_no_state, x, params["scan"])
+        else:
+            def scan_with_state(xx, scanned):
+                gp, gst = scanned
+                xx, nst, aux_g = body(xx, gp, gst)
+                return xx, (nst, aux_g)
+
+            x, (nst, aux_s) = jax.lax.scan(
+                scan_with_state, x, (params["scan"], states["scan"])
+            )
+            new_states["scan"] = nst
+        aux_tot = _add_aux(aux_tot, {k: jnp.sum(aux_s[k]) for k in AUX_KEYS})
+
+    for slot, i in enumerate(plan["suffix"]):
+        st = states["suffix"][slot] if states is not None else None
+        x, nst, aux = run(params["suffix"][slot], x, kinds[i], st)
+        if new_states is not None:
+            new_states["suffix"].append(nst)
+        aux_tot = _add_aux(aux_tot, aux)
+
+    return x, new_states, aux_tot

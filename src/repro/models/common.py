@@ -1,0 +1,71 @@
+"""Parameter/bootstrap helpers shared by all layers (no flax: pure pytrees).
+
+Parameters are nested dicts of jnp arrays; every layer is an
+``init(key, ...) -> params`` plus ``apply(params, x, ...) -> y`` pair.
+Mixed precision follows the MaxText convention: params kept in
+``param_dtype`` (fp32), casted to ``dtype`` (bf16) at use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "embed_init",
+    "DTYPES",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+def dense_init(
+    key: jax.Array,
+    d_in: int,
+    d_out: int | tuple[int, ...],
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+    scale: float | None = None,
+) -> dict:
+    """He/truncated-normal initialized dense kernel (d_in, *d_out)."""
+    shape = (d_in,) + ((d_out,) if isinstance(d_out, int) else tuple(d_out))
+    std = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"kernel": jax.random.truncated_normal(key, -2, 2, shape, dtype) * std}
+    if bias:
+        p["bias"] = jnp.zeros(shape[1:], dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """x @ kernel (+ bias), contracting x's last dim with kernel dim 0."""
+    k = p["kernel"].astype(dtype)
+    y = jax.lax.dot_general(
+        x.astype(dtype),
+        k,
+        (((x.ndim - 1,), (0,)), ((), ())),
+    )
+    if "bias" in p:
+        y = y + p["bias"].astype(dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"embedding": jax.random.normal(key, (vocab, d), dtype) * 0.02}

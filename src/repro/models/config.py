@@ -1,0 +1,123 @@
+"""Model configuration dataclasses for all assigned architectures.
+
+One frozen config fully determines parameter shapes, layer pattern, and
+entry-point semantics.  ``layer_pattern`` is a repeating cycle of layer
+kinds, e.g. ``("local", "global")`` for Gemma-2's alternating attention or
+``("rglru", "rglru", "attn")`` for RecurrentGemma's 2:1 mix; a non-divisible
+``num_layers`` keeps the leftover prefix of the cycle at the end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+__all__ = ["MoEConfig", "ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    # Paper-technique axis: "fine" = flat sorted dispatch (dropless within
+    # the buffer bound, the paper's decomposition); "coarse" = per-expert
+    # capacity buckets (the baseline the paper replaces).
+    dispatch: str = "fine"
+    capacity_factor: float = 1.25  # per-expert bucket slack (coarse)
+    buffer_factor: float = 1.25  # flat-buffer slack (fine)
+    # Layers l with l >= first_dense and (l - first_dense) % period == 0
+    # use MoE FFN; others dense.
+    first_dense: int = 0
+    period: int = 1
+    router_z_loss: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Attention options
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int | None = None  # used by "local" layers
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    attn_logit_softcap: float | None = None
+    final_logit_softcap: float | None = None
+    attn_scale: float | None = None  # default 1/sqrt(head_dim)
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma-style sqrt(d_model) input scaling
+    sandwich_norm: bool = False  # gemma2 post-norms
+    act: str = "silu"
+    norm_eps: float = 1e-6
+
+    # MoE
+    moe: MoEConfig | None = None
+
+    # Encoder-decoder
+    encoder_layers: int = 0
+    encoder_pattern: Tuple[str, ...] = ("attn",)
+
+    # Modality frontend stub: the backbone consumes precomputed embeddings
+    # for the first ``frontend_len`` positions ("audio" frames / "vision"
+    # patches) — per the assignment spec, frontends are stubs.
+    frontend: str | None = None
+    frontend_len: int = 0
+
+    # Recurrent blocks
+    rglru_width: int = 0  # RG-LRU recurrence width (0 -> d_model)
+    conv1d_width: int = 4
+    rwkv_head_dim: int = 64
+
+    # Numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    scan_layers: bool = True
+    remat: str = "full"  # none | full | selective
+    attn_chunk: int = 512  # flash-attention KV chunk
+    # Megatron-style sequence-parallel residual boundaries (giant models:
+    # shards the layer-scan's saved activation stacks over 'model').
+    seq_shard_boundary: bool = False
+
+    # ------------------------------------------------------------------ #
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def q_per_kv(self) -> int:
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Concrete kind per decoder layer (cycle repeated/truncated)."""
+        pat = self.layer_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    def encoder_kinds(self) -> Tuple[str, ...]:
+        pat = self.encoder_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.encoder_layers))
+
+    def uses_moe(self, layer_idx: int) -> bool:
+        m = self.moe
+        if m is None:
+            return False
+        return layer_idx >= m.first_dense and (layer_idx - m.first_dense) % m.period == 0
+
+    def sub_quadratic(self) -> bool:
+        """True iff no layer performs unbounded full attention (long_500k)."""
+        full_attn = {"attn", "global"}
+        return not any(k in full_attn for k in self.layer_kinds() + self.encoder_kinds())
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

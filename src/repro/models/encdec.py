@@ -1,0 +1,120 @@
+"""Encoder-decoder model (seamless-m4t backbone: audio frontend stub).
+
+The encoder consumes precomputed frame embeddings (B, S_src, d_model) —
+the modality frontend is a stub per the assignment spec — through a
+bidirectional attention stack.  The decoder is a causal stack whose blocks
+carry an extra cross-attention sublayer over the encoder output.
+
+Serve path: the encoder runs once at prefill; the encoder output rides in
+``states['enc_out']`` and is re-projected by each decode step's
+cross-attention (K/V recompute; caching cross-K/V is a recorded
+optimization opportunity in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import stack_apply, stack_init, stack_init_states
+from .common import dense, dense_init, embed_init, rmsnorm, rmsnorm_init
+from .config import ModelConfig
+
+__all__ = ["encdec_init", "encdec_apply", "encdec_encode", "encdec_init_states"]
+
+
+def encdec_init(cfg: ModelConfig, key: jax.Array) -> dict:
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dt),
+        "encoder": stack_init(kenc, cfg, cfg.encoder_kinds(), cross=False),
+        "enc_norm": rmsnorm_init(cfg.d_model, dt),
+        "decoder": stack_init(kdec, cfg, cfg.layer_kinds(), cross=True),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(kh, cfg.d_model, cfg.vocab_size, dtype=dt)
+    return p
+
+
+def encdec_init_states(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dec = stack_init_states(
+        cfg, cfg.layer_kinds(), batch, max_len, jnp.dtype(cfg.dtype)
+    )
+    return {
+        "decoder": dec,
+        "enc_out": jnp.zeros(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype)
+        ),
+    }
+
+
+def encdec_encode(params: dict, cfg: ModelConfig, src_embeds: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    positions = jnp.arange(src_embeds.shape[1], dtype=jnp.int32)
+    x, _, _ = stack_apply(
+        params["encoder"],
+        src_embeds.astype(jnp.dtype(cfg.dtype)),
+        cfg=cfg,
+        kinds=cfg.encoder_kinds(),
+        positions=positions,
+        causal=False,
+    )
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_apply(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, St) decoder tokens
+    *,
+    src_embeds: jax.Array | None = None,  # encoder input (train / prefill)
+    states: dict | None = None,
+    pos_offset: jax.Array | int = 0,
+    return_features: bool = False,
+) -> tuple[jax.Array, dict | None, dict]:
+    """Returns (logits, new_states, aux).
+
+    Train: ``src_embeds`` given, states None.  Prefill: both given —
+    encoder runs, its output is stored in states.  Decode: states only.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if src_embeds is not None:
+        enc_out = encdec_encode(params, cfg, src_embeds)
+    else:
+        assert states is not None, "decode needs states carrying enc_out"
+        enc_out = states["enc_out"]
+
+    x = params["embed"]["embedding"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    positions = jnp.asarray(pos_offset, jnp.int32) + jnp.arange(
+        x.shape[1], dtype=jnp.int32
+    )
+
+    dec_states = states["decoder"] if states is not None else None
+    x, new_dec, aux = stack_apply(
+        params["decoder"],
+        x,
+        cfg=cfg,
+        kinds=cfg.layer_kinds(),
+        positions=positions,
+        states=dec_states,
+        causal=True,
+        enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_states = None
+    if states is not None:
+        new_states = {"decoder": new_dec, "enc_out": enc_out}
+    if return_features:
+        return x, new_states, aux
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["embedding"].astype(dt))
+    else:
+        logits = dense(params["head"], x, dt)
+    if cfg.final_logit_softcap is not None:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits.astype(jnp.float32), new_states, aux

@@ -1,0 +1,34 @@
+"""Dense feed-forward layers: SwiGLU / GeGLU (gated) per LLaMA/Gemma."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init
+from .config import ModelConfig
+
+__all__ = ["ffn_init", "ffn_apply", "act_fn"]
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[
+        name
+    ]
+
+
+def ffn_init(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    d_ff = cfg.d_ff if d_ff is None else d_ff
+    return {
+        "gate": dense_init(kg, cfg.d_model, d_ff, dtype=dt),
+        "up": dense_init(ku, cfg.d_model, d_ff, dtype=dt),
+        "down": dense_init(kd, d_ff, cfg.d_model, dtype=dt),
+    }
+
+
+def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    g = act_fn(cfg.act)(dense(p["gate"], x, dt))
+    return dense(p["down"], g * dense(p["up"], x, dt), dt)

@@ -1,0 +1,211 @@
+"""Flash attention in pure JAX: online-softmax forward + chunked-recompute
+custom-VJP backward.
+
+Why a custom VJP: a naive ``lax.scan`` online softmax is memory-safe in the
+*forward*, but autodiff saves each chunk's probability matrix as a scan
+residual — reconstituting the full (Sq × Skv) score tensor in fp32 (the
+smollm train_4k dry-run measured 64 GB/device of exactly this; EXPERIMENTS
+§Perf iteration 1).  The custom backward recomputes each chunk's scores
+from (q, k, lse) and accumulates dq/dk/dv chunk-by-chunk, so train-time
+attention memory is O(Sq · chunk) like the forward.
+
+Head layout: q keeps its FULL head axis (B, Sq, H, Dh) through every
+einsum and K/V are expanded KV→H *per chunk* inside the loop.  A (KV, G)
+split of a 'model'-sharded H axis is unrepresentable for GSPMD — it falls
+back to sharding the contraction dim and every score chunk becomes a
+partial-sum all-reduce (gemma2 prefill measured 21k all-reduces = 11.6 TB
+per device; EXPERIMENTS §Perf iteration 8).  With H intact, head-sharded
+attention is collective-free; the per-chunk KV expansion materializes only
+(B, chunk, H, Dh).
+
+Also supports: causal masks with absolute positions, sliding windows (ring
+caches pass non-contiguous kv_positions), gemma2 logit soft-capping (the
+backward applies the 1 − tanh² chain rule on recomputed raw scores).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+class _Meta(NamedTuple):
+    scale: float
+    causal: bool
+    window: int | None
+    softcap: float | None
+    chunk: int
+    q_per_kv: int
+
+
+def _chunk_kv(k, v, kv_pos, chunk):
+    b, skv, kvh, dh = k.shape
+    n = (skv + chunk - 1) // chunk
+    pad = n * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    shape = (b, n, chunk, kvh, dh)
+    return (
+        jnp.moveaxis(k.reshape(shape), 1, 0),
+        jnp.moveaxis(v.reshape(shape), 1, 0),
+        kv_pos.reshape(n, chunk),
+    )
+
+
+def _expand_heads(x_i: jax.Array, g: int) -> jax.Array:
+    """(B, C, KV, Dh) -> (B, C, H, Dh): repeat each kv head g times."""
+    if g == 1:
+        return x_i
+    b, c, kvh, dh = x_i.shape
+    return jnp.broadcast_to(
+        x_i[:, :, :, None, :], (b, c, kvh, g, dh)
+    ).reshape(b, c, kvh * g, dh)
+
+
+def _scores(qf, k_i, p_i, q_pos, meta: _Meta):
+    """Masked scores for one chunk (shared fwd/bwd).
+
+    The mask is applied as a small additive (Sq, C) f32 bias, NOT a
+    broadcast boolean ``where``: XLA's loop-invariant code motion hoists
+    position-only masks out of the KV-chunk loop, and a broadcast pred of
+    the full score shape measured 16 GB/device on the smollm train_4k
+    dry-run (EXPERIMENTS §Perf).  The bias keeps the hoisted tensor at
+    (chunks, Sq, C).
+    """
+    kh = _expand_heads(k_i, meta.q_per_kv).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bchd->bqhc", qf, kh)
+    tanh_t = None
+    if meta.softcap is not None:
+        tanh_t = jnp.tanh(s / meta.softcap)
+        s = meta.softcap * tanh_t
+    valid = p_i[None, :] >= 0
+    if meta.causal:
+        valid = valid & (p_i[None, :] <= q_pos[:, None])
+    if meta.window is not None:
+        valid = valid & ((q_pos[:, None] - p_i[None, :]) < meta.window)
+    bias = jnp.where(valid, 0.0, _NEG).astype(jnp.float32)  # (Sq, C)
+    s = s + bias[None, :, None, :]
+    return s, tanh_t
+
+
+def _fwd_scan(q, k, v, q_pos, kv_pos, meta: _Meta):
+    b, sq, h, dh = q.shape
+    qf = q.astype(jnp.float32) * meta.scale
+    ks, vs, ps = _chunk_kv(k, v, kv_pos, meta.chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, p_i = inp
+        s, _ = _scores(qf, k_i, p_i, q_pos, meta)
+        vh = _expand_heads(v_i, meta.q_per_kv).astype(jnp.float32)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqhc,bchd->bqhd", p, vh)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), _NEG)
+    l0 = jnp.zeros((b, sq, h))
+    acc0 = jnp.zeros((b, sq, h, dh))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (ks, vs, ps))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _flash(q, k, v, q_pos, kv_pos, meta: _Meta):
+    return _fwd_scan(q, k, v, q_pos, kv_pos, meta)[0]
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, meta: _Meta):
+    out, lse = _fwd_scan(q, k, v, q_pos, kv_pos, meta)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(meta: _Meta, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    g = meta.q_per_kv
+    qf = q.astype(jnp.float32) * meta.scale
+    do = dout.astype(jnp.float32)
+    # D = rowsum(dO ∘ O): the softmax-normalization cotangent term.
+    delta = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (B, Sq, H)
+
+    ks, vs, ps = _chunk_kv(k, v, kv_pos, meta.chunk)
+
+    def body(dq_acc, inp):
+        k_i, v_i, p_i = inp
+        s, tanh_t = _scores(qf, k_i, p_i, q_pos, meta)
+        p = jnp.exp(s - lse[..., None])  # (B, Sq, H, C) — one chunk only
+        vh = _expand_heads(v_i, g).astype(jnp.float32)
+        dvh = jnp.einsum("bqhc,bqhd->bchd", p, do)
+        dp = jnp.einsum("bqhd,bchd->bqhc", do, vh)
+        ds = p * (dp - delta[..., None])
+        if meta.softcap is not None:
+            ds = ds * (1.0 - tanh_t * tanh_t)
+        kh = _expand_heads(k_i, g).astype(jnp.float32)
+        dq_acc = dq_acc + jnp.einsum("bqhc,bchd->bqhd", ds, kh)
+        dkh = jnp.einsum("bqhc,bqhd->bchd", ds, qf)
+        c = k_i.shape[1]
+        # Fold the expanded-head gradients back onto the kv heads.
+        dk_i = dkh.reshape(b, c, kvh, g, dh).sum(axis=3)
+        dv_i = dvh.reshape(b, c, kvh, g, dh).sum(axis=3)
+        return dq_acc, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, ps))
+    dq = (dq * meta.scale).astype(q.dtype)
+
+    def _unchunk(x):
+        xx = jnp.moveaxis(x, 0, 1).reshape(b, -1, kvh, dh)
+        return xx[:, :skv]
+
+    dk = _unchunk(dks).astype(k.dtype)
+    dv = _unchunk(dvs).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, Dh) — full head axis (never split; see above)
+    k: jax.Array,  # (B, Skv, KV, Dh)
+    v: jax.Array,  # (B, Skv, KV, Dh)
+    *,
+    scale: float,
+    causal: bool,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    window: int | None,
+    softcap: float | None,
+    chunk: int,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    assert h % kvh == 0
+    meta = _Meta(
+        scale=float(scale),
+        causal=bool(causal),
+        window=None if window is None else int(window),
+        softcap=None if softcap is None else float(softcap),
+        chunk=int(min(chunk, k.shape[1])),
+        q_per_kv=h // kvh,
+    )
+    return _flash(
+        q, k, v, q_positions.astype(jnp.int32), kv_positions.astype(jnp.int32), meta
+    )

@@ -1,0 +1,95 @@
+"""Decoder-only language model (covers dense / moe / hybrid / ssm / vlm).
+
+Entry points used by train/serve/launch:
+
+  * ``lm_init(cfg, key)`` — parameter pytree.
+  * ``lm_apply(params, cfg, tokens, embeds=…, states=…, pos_offset=…)`` —
+    one function for train (states=None, full sequence), prefill (states
+    threaded, full prompt) and decode (states threaded, S == 1).
+
+Multimodal ([vlm]/[audio] decoder-only) archs pass ``embeds``: precomputed
+frontend embeddings occupying the first positions of the stream (the
+assignment spec mandates stub frontends); loss/logits are produced for the
+token positions only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import constrain_batch
+from .blocks import stack_apply, stack_init, stack_init_states
+from .common import embed_init, rmsnorm, rmsnorm_init, dense_init, dense
+from .config import ModelConfig
+
+__all__ = ["lm_init", "lm_apply", "lm_init_states"]
+
+
+def lm_init(cfg: ModelConfig, key: jax.Array) -> dict:
+    ke, ks, kh = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dt),
+        "stack": stack_init(ks, cfg, cfg.layer_kinds()),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(kh, cfg.d_model, cfg.vocab_size, dtype=dt)
+    return p
+
+
+def lm_init_states(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return stack_init_states(
+        cfg, cfg.layer_kinds(), batch, max_len, jnp.dtype(cfg.dtype)
+    )
+
+
+def lm_apply(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, St) int32
+    *,
+    embeds: jax.Array | None = None,  # (B, F, d_model) frontend prefix
+    states: dict | None = None,
+    pos_offset: jax.Array | int = 0,
+    return_features: bool = False,
+) -> tuple[jax.Array, dict | None, dict]:
+    """Returns (logits (B, S_total, V), new_states, aux).
+
+    ``return_features=True`` skips the unembedding and returns the final-
+    norm features instead (the fused-CE training path, fused_loss.py).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"]["embedding"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(dt), x], axis=1)
+    x = constrain_batch(x)
+    s_total = x.shape[1]
+    positions = jnp.asarray(pos_offset, jnp.int32) + jnp.arange(
+        s_total, dtype=jnp.int32
+    )
+
+    x, new_states, aux = stack_apply(
+        params["stack"],
+        x,
+        cfg=cfg,
+        kinds=cfg.layer_kinds(),
+        positions=positions,
+        states=states,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_features:
+        return x, new_states, aux
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"]["embedding"].astype(dt)
+        )
+    else:
+        logits = dense(params["head"], x, dt)
+    if cfg.final_logit_softcap is not None:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits.astype(jnp.float32), new_states, aux

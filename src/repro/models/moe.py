@@ -1,0 +1,385 @@
+"""Mixture-of-Experts FFN with coarse vs fine dispatch — the paper's
+technique applied to the framework's own irregular-parallelism hot-spot.
+
+The mapping (DESIGN.md §3): experts are "rows", routed (token, k)
+assignments are "nonzeros".
+
+* ``dispatch="coarse"`` — GShard/Switch-style **per-expert capacity
+  buckets**: every expert gets a fixed (E, C) buffer; hot experts overflow
+  (dropped tokens), cold experts pad (wasted FLOPs).  This is the
+  row-granularity decomposition of Algorithm 2.
+* ``dispatch="fine"``  — the paper's flat task space: (token, k) pairs are
+  sorted by expert into **one flat buffer** whose group boundaries are
+  recovered with the same ``searchsorted`` index math as the K-truss flat
+  range (``repro.core.taskmap``); grouped GEMM via ``lax.ragged_dot``.
+  Dropless on a single shard (buffer == T·K); per-shard transport buckets
+  in the EP-sharded path are bounded by ``buffer_factor`` with overflow
+  accounting.
+
+Both modes share the router and the expert parameters, so the benchmark
+(benchmarks/moe_dispatch.py) isolates exactly the decomposition — the same
+variable the paper isolates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.taskmap import segment_offsets
+from ..distributed.context import current_shard_ctx
+from .common import dense_init
+from .config import ModelConfig, MoEConfig
+from .ffn import act_fn, ffn_apply, ffn_init
+
+__all__ = ["moe_init", "moe_apply", "router_topk"]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    assert m is not None
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    std = d**-0.5
+    p = {
+        "router": dense_init(kr, d, e, dtype=dt),
+        "gate": jax.random.truncated_normal(kg, -2, 2, (e, d, f), dt) * std,
+        "up": jax.random.truncated_normal(ku, -2, 2, (e, d, f), dt) * std,
+        "down": jax.random.truncated_normal(kd, -2, 2, (e, f, d), dt) * (f**-0.5),
+    }
+    if m.num_shared_experts:
+        p["shared"] = ffn_init(ks, cfg, d_ff=f * m.num_shared_experts)
+    return p
+
+
+def router_topk(p: dict, x2d: jax.Array, m: MoEConfig):
+    """Route tokens: returns (weights (T,K) f32, ids (T,K) i32, aux dict)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]["kernel"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux + router z-loss.
+    e = m.num_experts
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    p_e = jnp.mean(probs, axis=0)
+    aux = {
+        "moe_aux_loss": e * jnp.sum(f_e * p_e) * m.aux_loss_coef,
+        "moe_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        * m.router_z_loss,
+        "expert_load": f_e,
+    }
+    return weights, ids.astype(jnp.int32), aux
+
+
+def _expert_ffn_batched(p: dict, buf: jax.Array, act: str, dt) -> jax.Array:
+    """(E, C, D) -> (E, C, D) batched per-expert gated FFN."""
+    g = act_fn(act)(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", g * u, p["down"].astype(dt))
+
+
+def _expert_ffn_ragged(p: dict, xs: jax.Array, group_sizes: jax.Array, act, dt):
+    """(M, D) sorted-by-expert -> (M, D) via grouped (ragged) GEMM."""
+    g = act_fn(act)(jax.lax.ragged_dot(xs, p["gate"].astype(dt), group_sizes))
+    u = jax.lax.ragged_dot(xs, p["up"].astype(dt), group_sizes)
+    return jax.lax.ragged_dot(g * u, p["down"].astype(dt), group_sizes)
+
+
+def tile_aligned_offsets(loc_e: jax.Array, el: int, tile: int, cap: int):
+    """Tile-aligned destination slot for each sorted assignment.
+
+    MegaBlocks-style: expert e's tokens start at a tile-aligned offset
+    ``off[e] = Σ_{e'<e} ceil(count[e'] / tile) · tile``, so every ``tile``-
+    row block of the buffer belongs to exactly ONE expert and the grouped
+    GEMM becomes a scan of dense (tile, D) @ (D, F) matmuls — the paper's
+    uniform-tiles-over-a-flat-task-space device, applied to experts.
+
+    Args:
+      loc_e: (M,) sorted local expert ids (el = invalid tail).
+      Returns (slots (M,), tile_expert (cap//tile,), fits_mask (M,)).
+    """
+    counts = jnp.bincount(jnp.minimum(loc_e, el), length=el + 1)[:el]
+    padded = ((counts + tile - 1) // tile) * tile
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(padded)]).astype(
+        jnp.int32
+    )
+    pos_in_e = jnp.arange(loc_e.shape[0], dtype=jnp.int32) - jnp.searchsorted(
+        loc_e, loc_e, side="left"
+    ).astype(jnp.int32)
+    slots = offs[jnp.minimum(loc_e, el - 1)] + pos_in_e
+    valid = loc_e < el
+    slots = jnp.where(valid & (slots < cap), slots, cap)  # overflow -> drop
+    # Which expert owns each tile: first offset table lookup per tile start.
+    tile_starts = jnp.arange(cap // tile, dtype=jnp.int32) * tile
+    tile_expert = (
+        jnp.searchsorted(offs, tile_starts, side="right").astype(jnp.int32) - 1
+    )
+    tile_expert = jnp.clip(tile_expert, 0, el - 1)
+    return slots, tile_expert, valid & (slots < cap)
+
+
+def _expert_ffn_tiled(
+    wg: jax.Array,  # (El, D, F)
+    wu: jax.Array,
+    wd: jax.Array,  # (El, F, D)
+    buf: jax.Array,  # (cap, D) tile-aligned sorted tokens
+    tile_expert: jax.Array,  # (cap//tile,)
+    act: str,
+    dt,
+    tile: int,
+):
+    """Dense (tile, D) @ per-tile expert weights, scanned over tiles.
+
+    Replaces ``lax.ragged_dot`` in the sharded path: XLA's ragged_dot
+    lowering materializes a dense (groups × M × D) select (28 GB/device on
+    the kimi prefill dry-run — EXPERIMENTS §Perf); the tile scan keeps the
+    working set at one expert's weights + one (tile, F) activation block.
+    """
+    a = act_fn(act)
+    cap = buf.shape[0]
+    bt = buf.reshape(cap // tile, tile, buf.shape[1])
+
+    def body(_, inp):
+        xb, e = inp
+        g = a(jnp.einsum("td,df->tf", xb, wg[e].astype(dt)))
+        u = jnp.einsum("td,df->tf", xb, wu[e].astype(dt))
+        return _, jnp.einsum("tf,fd->td", g * u, wd[e].astype(dt))
+
+    _, out = jax.lax.scan(body, None, (bt, tile_expert))
+    return out.reshape(cap, buf.shape[1])
+
+
+def moe_apply(
+    p: dict, x2d: jax.Array, cfg: ModelConfig, *, buffer_cap: int | None = None
+) -> tuple[jax.Array, dict]:
+    """MoE FFN on flattened tokens (T, D). Returns (y, aux metrics).
+
+    Dispatches to the shard_map expert-parallel path when a sharding
+    context with a model axis is active (launch/dry-run), else runs the
+    single-shard math below.  ``buffer_cap`` optionally bounds the fine
+    path's flat buffer; default T·K = dropless.
+    """
+    m = cfg.moe
+    assert m is not None
+    ctx = current_shard_ctx()
+    if (
+        ctx is not None
+        and ctx.model_size > 1
+        and m.num_experts % ctx.model_size == 0
+    ):
+        return _moe_apply_sharded(p, x2d, cfg, ctx)
+    dt = jnp.dtype(cfg.dtype)
+    t, d = x2d.shape
+    k = m.top_k
+    e = m.num_experts
+
+    weights, ids, aux = router_topk(p, x2d, m)
+    flat_e = ids.reshape(-1)  # (T·K,)
+    flat_w = weights.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    if m.dispatch == "coarse":
+        cap = int(max(1, round(t * k / e * m.capacity_factor)))
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T·K, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos = jnp.sum(pos * onehot, axis=1)  # position within expert
+        keep = pos < cap
+        buf = jnp.zeros((e, cap, d), dt)
+        be = jnp.where(keep, flat_e, e)  # drop -> out-of-range row
+        buf = buf.at[be, jnp.minimum(pos, cap - 1)].add(
+            x2d[flat_t].astype(dt) * keep[:, None], mode="drop"
+        )
+        out_buf = _expert_ffn_batched(p, buf, cfg.act, dt)
+        y = jnp.zeros((t, d), jnp.float32)
+        contrib = out_buf[be, jnp.minimum(pos, cap - 1)].astype(jnp.float32)
+        y = y.at[flat_t].add(
+            contrib * (flat_w * keep)[:, None], mode="drop"
+        )
+        aux["moe_drop_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        aux["moe_pad_frac"] = 1.0 - jnp.sum(keep) / (e * cap)
+    elif m.dispatch == "fine":
+        cap = int(t * k if buffer_cap is None else buffer_cap)
+        order = jnp.argsort(flat_e)  # stable in jnp
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        keep = jnp.arange(se.shape[0]) < cap
+        se_k, st_k = se[:cap], st[:cap]
+        # The paper's flat-task boundary recovery (taskmap.segment_offsets).
+        offs = segment_offsets(se_k, e)
+        group_sizes = jnp.diff(offs)
+        xs = x2d[st_k].astype(dt)
+        out = _expert_ffn_ragged(p, xs, group_sizes, cfg.act, dt)
+        y = jnp.zeros((t, d), jnp.float32)
+        y = y.at[st_k].add(
+            out.astype(jnp.float32) * (sw[:cap] * keep[:cap])[:, None],
+            mode="drop",
+        )
+        aux["moe_drop_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        aux["moe_pad_frac"] = jnp.float32(0.0)
+    else:
+        raise ValueError(f"unknown dispatch {m.dispatch!r}")
+
+    if m.num_shared_experts:
+        y = y + ffn_apply(p["shared"], x2d, cfg).astype(jnp.float32)
+    return y.astype(dt), aux
+
+
+# ---------------------------------------------------------------------- #
+# Expert-parallel shard_map path (EP over the 'model' axis)
+# ---------------------------------------------------------------------- #
+def _moe_apply_sharded(p: dict, x2d: jax.Array, cfg: ModelConfig, ctx):
+    """TP-style EP: experts sharded over the model axis, tokens replicated.
+
+    Activations reach every model shard anyway under tensor parallelism, so
+    expert parallelism needs **no all-to-all**: each shard routes the full
+    local-token set against its E/ep local experts and the partial outputs
+    psum over the model axis (DESIGN.md §7).  Expert weights arrive
+    FSDP-sharded and are all-gathered *inside* the shard (ZeRO-3).
+
+    The coarse/fine contrast survives sharding intact:
+      * fine: ONE flat sorted buffer per shard, bounded by
+        ``buffer_factor × fair-share``; only aggregate overflow drops.
+      * coarse: per-expert capacity buckets — hot experts overflow even
+        when the shard's aggregate buffer has room (the paper's imbalance).
+    """
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    ep = ctx.model_size
+    e = m.num_experts
+    el = e // ep
+    k = m.top_k
+    dp = ctx.dp_axes
+    fsdp = ctx.fsdp_axes
+    model_ax = ctx.model_axis
+    t_glob, d = x2d.shape
+    dp_size = 1
+    for a in dp:
+        dp_size *= ctx.mesh.shape[a]
+    t_loc = t_glob // dp_size
+    fine = m.dispatch == "fine"
+    tile = 256
+    if fine:
+        base = int(round(t_loc * k / ep * m.buffer_factor))
+        # + one tile per local expert of alignment slack (tile_aligned_offsets)
+        cap = max(tile, ((base + el * tile + tile - 1) // tile) * tile)
+    else:
+        cap_e = max(1, int(round(t_loc * k / e * m.capacity_factor)))
+
+    def local_fn(x_loc, router_w, wg, wu, wd):
+        # x_loc: (T_loc, D) — replicated over the model axis by in_spec.
+        wg_full = jax.lax.all_gather(wg, fsdp, axis=1, tiled=True)
+        wu_full = jax.lax.all_gather(wu, fsdp, axis=1, tiled=True)
+        wd_full = jax.lax.all_gather(wd, fsdp, axis=2, tiled=True)
+        shard = jax.lax.axis_index(model_ax)
+
+        logits = x_loc.astype(jnp.float32) @ router_w.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, ids = jax.lax.top_k(probs, k)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+        flat_e = ids.reshape(-1).astype(jnp.int32)
+        flat_w = weights.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), k)
+        is_local = (flat_e >= shard * el) & (flat_e < (shard + 1) * el)
+
+        if fine:
+            # Paper's flat task space: sort (token,k) pairs into ONE shared
+            # buffer with tile-aligned expert boundaries, then scan dense
+            # (tile, D) GEMMs — uniform tiles over the flat task range.
+            sort_key = jnp.where(is_local, flat_e, e)
+            order = jnp.argsort(sort_key)
+            se = sort_key[order]
+            st = flat_t[order]
+            sw = flat_w[order]
+            loc_e = jnp.where(se < e, se - shard * el, el)
+            slots, tile_expert, keep = tile_aligned_offsets(loc_e, el, tile, cap)
+            # slots[r] >= r (tile padding only pushes slots forward), so
+            # every kept assignment lives in the first ``cap`` sorted rows
+            # — gather/scatter only that prefix.  Gathering all T·K rows
+            # cost 2 × 7.5 GB fp32 on the kimi prefill dry-run (§Perf).
+            ncap = min(cap, slots.shape[0])
+            st_c, sw_c = st[:ncap], sw[:ncap]
+            slots_c, keep_c = slots[:ncap], keep[:ncap]
+            buf = jnp.zeros((cap, d), dt)
+            buf = buf.at[slots_c].add(
+                x_loc[st_c].astype(dt) * keep_c[:, None], mode="drop"
+            )
+            out_buf = _expert_ffn_tiled(
+                wg_full, wu_full, wd_full, buf, tile_expert, cfg.act, dt, tile
+            )
+            contrib = out_buf[jnp.minimum(slots_c, cap - 1)].astype(jnp.float32)
+            y = jnp.zeros((t_loc, d), jnp.float32)
+            y = y.at[st_c].add(contrib * (sw_c * keep_c)[:, None], mode="drop")
+            kept = jnp.sum(keep.astype(jnp.float32))
+        else:
+            # Baseline: per-expert capacity buckets (Alg-2 granularity).
+            loc_e = jnp.where(is_local, flat_e - shard * el, el)
+            onehot = jax.nn.one_hot(loc_e, el, dtype=jnp.int32)
+            pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=1)
+            keep = is_local & (pos < cap_e)
+            be = jnp.where(keep, loc_e, el)
+            pc = jnp.minimum(pos, cap_e - 1)
+            buf = jnp.zeros((el, cap_e, d), dt)
+            buf = buf.at[be, pc].add(
+                x_loc[flat_t].astype(dt) * keep[:, None], mode="drop"
+            )
+            g = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, wg_full.astype(dt)))
+            u = jnp.einsum("ecd,edf->ecf", buf, wu_full.astype(dt))
+            out_buf = jnp.einsum("ecf,efd->ecd", g * u, wd_full.astype(dt))
+            y = jnp.zeros((t_loc, d), jnp.float32)
+            contrib = out_buf[be, pc].astype(jnp.float32)
+            y = y.at[flat_t].add(contrib * (flat_w * keep)[:, None], mode="drop")
+            kept = jnp.sum(keep.astype(jnp.float32))
+
+        y = jax.lax.psum(y, model_ax)
+        # Routing statistics (exact across the dp shards).
+        assigned = jax.lax.psum(jnp.sum(is_local.astype(jnp.float32)), model_ax)
+        kept = jax.lax.psum(kept, model_ax)
+        n_tok = jnp.float32(t_loc * k)
+        drop = 1.0 - jax.lax.pmean(kept / jnp.maximum(assigned, 1.0), dp)
+        f_e = jax.lax.pmean(
+            jnp.mean(jax.nn.one_hot(ids, e, dtype=jnp.float32).sum(1), axis=0),
+            dp,
+        )
+        p_e = jax.lax.pmean(jnp.mean(probs, axis=0), dp)
+        aux_loss = e * jnp.sum(f_e * p_e) * m.aux_loss_coef
+        z = jax.lax.pmean(
+            jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2), dp
+        ) * m.router_z_loss
+        del n_tok
+        return y.astype(dt), aux_loss, z, drop, f_e
+
+    in_specs = (
+        P(dp, None),  # tokens
+        P(None, None),  # router
+        P(model_ax, fsdp, None),  # gate (E, D, F)
+        P(model_ax, fsdp, None),  # up
+        P(model_ax, None, fsdp),  # down (E, F, D)
+    )
+    out_specs = (P(dp, None), P(), P(), P(), P())
+    y, aux_loss, z, drop, f_e = jax.shard_map(
+        local_fn,
+        mesh=ctx.mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )(
+        x2d,
+        p["router"]["kernel"],
+        p["gate"],
+        p["up"],
+        p["down"],
+    )
+    aux = {
+        "moe_aux_loss": aux_loss,
+        "moe_z_loss": z,
+        "moe_drop_frac": drop,
+        "expert_load": f_e,
+        "moe_pad_frac": jnp.float32(0.0),
+    }
+    y = y.astype(jnp.float32)
+    if m.num_shared_experts:
+        y = y + ffn_apply(p["shared"], x2d, cfg).astype(jnp.float32)
+    return y.astype(dt), aux

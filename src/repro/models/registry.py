@@ -1,0 +1,182 @@
+"""Uniform model facade over decoder-only and encoder-decoder stacks.
+
+``Model`` gives train/serve substrates and the dry-run one calling
+convention regardless of family:
+
+  * ``train_logits(params, batch)``  -> (logits aligned to labels, aux)
+  * ``prefill(params, batch)``       -> (last-position logits, states)
+  * ``decode(params, token, states, pos)`` -> (logits, states)
+
+Batch layouts per family (all int32 tokens; embeds are stub-frontend
+outputs per the assignment spec):
+
+  dense/moe/hybrid/ssm : {tokens (B,S), labels (B,S)}
+  vlm                  : {embeds (B,F,D), tokens (B,St), labels (B,St)}
+  audio (enc-dec)      : {src_embeds (B,Se,D), tokens (B,St), labels (B,St)}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .encdec import encdec_apply, encdec_init, encdec_init_states
+from .lm import lm_apply, lm_init, lm_init_states
+
+__all__ = ["Model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ #
+    def init(self, key: jax.Array) -> dict:
+        if self.cfg.is_encdec:
+            return encdec_init(self.cfg, key)
+        return lm_init(self.cfg, key)
+
+    def init_states(self, batch: int, max_len: int) -> dict:
+        if self.cfg.is_encdec:
+            return encdec_init_states(self.cfg, batch, max_len)
+        return lm_init_states(self.cfg, batch, max_len)
+
+    # ------------------------------------------------------------------ #
+    def train_logits(self, params: dict, batch: dict):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, _, aux = encdec_apply(
+                params, cfg, batch["tokens"], src_embeds=batch["src_embeds"]
+            )
+            return logits, aux
+        if cfg.family == "vlm":
+            logits, _, aux = lm_apply(
+                params, cfg, batch["tokens"], embeds=batch["embeds"]
+            )
+            f = batch["embeds"].shape[1]
+            return logits[:, f:, :], aux  # loss over text positions only
+        logits, _, aux = lm_apply(params, cfg, batch["tokens"])
+        return logits, aux
+
+    def train_features(self, params: dict, batch: dict):
+        """Fused-CE path: (features aligned to labels, unembed, transposed, aux).
+
+        ``unembed`` is the (V, D) embedding when tied (transposed=True) or
+        the (D, V) head kernel otherwise; the caller fuses the unembedding
+        into the chunked loss (repro.train.fused_loss).
+        """
+        cfg = self.cfg
+        if cfg.is_encdec:
+            feats, _, aux = encdec_apply(
+                params,
+                cfg,
+                batch["tokens"],
+                src_embeds=batch["src_embeds"],
+                return_features=True,
+            )
+        elif cfg.family == "vlm":
+            feats, _, aux = lm_apply(
+                params,
+                cfg,
+                batch["tokens"],
+                embeds=batch["embeds"],
+                return_features=True,
+            )
+            feats = feats[:, batch["embeds"].shape[1] :, :]
+        else:
+            feats, _, aux = lm_apply(
+                params, cfg, batch["tokens"], return_features=True
+            )
+        if cfg.tie_embeddings:
+            dt = jnp.dtype(cfg.dtype)
+            return feats, params["embed"]["embedding"].astype(dt), True, aux
+        return feats, params["head"]["kernel"].astype(jnp.dtype(cfg.dtype)), False, aux
+
+    # ------------------------------------------------------------------ #
+    def _unembed_last(self, params: dict, feats: jax.Array) -> jax.Array:
+        """Logits for the final position only (prefill never materializes
+        the full (B, S, V) logit tensor — at 32k × 256k vocab that would be
+        orders of magnitude larger than HBM)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        last = feats[:, -1, :]
+        if cfg.tie_embeddings:
+            logits = last @ params["embed"]["embedding"].astype(dt).T
+        else:
+            logits = last @ params["head"]["kernel"].astype(dt)
+        if cfg.final_logit_softcap is not None:
+            c = cfg.final_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        return logits.astype(jnp.float32)
+
+    def prefill(self, params: dict, batch: dict, max_len: int):
+        """Run the prompt; returns (last logits (B,V), filled states)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        states = self.init_states(b, max_len)
+        if cfg.is_encdec:
+            feats, states, _ = encdec_apply(
+                params,
+                cfg,
+                tokens,
+                src_embeds=batch["src_embeds"],
+                states=states,
+                pos_offset=0,
+                return_features=True,
+            )
+        elif cfg.family == "vlm":
+            feats, states, _ = lm_apply(
+                params,
+                cfg,
+                tokens,
+                embeds=batch["embeds"],
+                states=states,
+                pos_offset=0,
+                return_features=True,
+            )
+        else:
+            feats, states, _ = lm_apply(
+                params, cfg, tokens, states=states, pos_offset=0,
+                return_features=True,
+            )
+        return self._unembed_last(params, feats), states
+
+    def decode(self, params: dict, token: jax.Array, states: dict, pos):
+        """One decode step: token (B, 1) at absolute position ``pos``."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, states, _ = encdec_apply(
+                params, cfg, token, states=states, pos_offset=pos
+            )
+        else:
+            logits, states, _ = lm_apply(
+                params, cfg, token, states=states, pos_offset=pos
+            )
+        return logits[:, -1, :], states
+
+    # ------------------------------------------------------------------ #
+    def param_count(self, params: dict) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    def active_param_count(self, params: dict) -> int:
+        """Parameters touched per token (MoE: top_k of num_experts)."""
+        m = self.cfg.moe
+        total = self.param_count(params)
+        if m is None:
+            return total
+
+        def expert_frac(path: str) -> bool:
+            return any(s in path for s in ("gate", "up", "down"))
+
+        moe_total = 0
+        moe_active = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            keys = "/".join(str(k) for k in path)
+            if "moe" in keys and ("'gate'" in keys or "'up'" in keys or "'down'" in keys):
+                moe_total += leaf.size
+                moe_active += leaf.size * m.top_k // m.num_experts
+        return total - moe_total + moe_active

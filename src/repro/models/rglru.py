@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block layout (Griffin §2.4): two linear branches from the residual stream;
+branch 1 → causal depthwise conv1d (width 4) → RG-LRU; branch 2 → GeLU
+gate; elementwise product → output projection.
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)            # recurrence gate
+    i_t = σ(W_x x_t + b_x)            # input gate
+    a_t = exp(-c · softplus(Λ) · r_t) # data-dependent decay, c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the linear recurrence with
+``lax.associative_scan`` (log-depth, the TPU-native schedule); decode is a
+single fused state update.  State per layer: {h, conv tail, pos} — O(d_rnn)
+per sequence, which is what makes recurrentgemma long_500k-legal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init
+from .config import ModelConfig
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_init_state"]
+
+_C = 8.0
+
+
+def rglru_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d_rnn = cfg.rglru_width or cfg.d_model
+    kx, kg, ka, ki, kc, ko, kl = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    w = cfg.conv1d_width
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin appendix).
+    lam = jax.random.uniform(kl, (d_rnn,), dt, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / (2 * _C)) - 1.0)  # softplus⁻¹
+    return {
+        "in_x": dense_init(kx, d, d_rnn, dtype=dt),
+        "in_gate": dense_init(kg, d, d_rnn, dtype=dt),
+        "gate_a": dense_init(ka, d_rnn, d_rnn, bias=True, dtype=dt),
+        "gate_x": dense_init(ki, d_rnn, d_rnn, bias=True, dtype=dt),
+        "conv_w": jax.random.normal(kc, (w, d_rnn), dt) * (w**-0.5),
+        "conv_b": jnp.zeros((d_rnn,), dt),
+        "out": dense_init(ko, d_rnn, d, dtype=dt),
+        "lambda": lam,
+    }
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_rnn = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, d_rnn), dtype),
+    }
+
+
+def _causal_conv(p: dict, x: jax.Array, tail: jax.Array | None, dt):
+    """Depthwise causal conv1d; returns (y, new_tail)."""
+    w = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], w - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([tail, x], axis=1)  # (B, S + w - 1, C)
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * p["conv_w"][i].astype(dt)
+        for i in range(w)
+    )
+    return y + p["conv_b"].astype(dt), xx[:, -(w - 1) :, :]
+
+
+def _lru_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t−1} + b_t over axis 1, given h0 (f32, log-depth)."""
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    # Fold h0 into the first step's additive term.
+    b = b.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    dt = jnp.dtype(cfg.dtype)
+    xb = dense(p["in_x"], x, dt)  # (B, S, d_rnn)
+    gate = jax.nn.gelu(dense(p["in_gate"], x, dt))
+
+    tail = None if state is None else state["conv"]
+    xc, new_tail = _causal_conv(p, xb, tail, dt)
+
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["gate_a"], xc, jnp.float32))
+    i = jax.nn.sigmoid(dense(p["gate_x"], xc, jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    h0 = (
+        jnp.zeros((x.shape[0], xb.shape[-1]), jnp.float32)
+        if state is None
+        else state["h"]
+    )
+    h = _lru_scan(a, b, h0)  # (B, S, d_rnn) f32
+
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1], "conv": new_tail}
+    y = dense(p["out"], h.astype(dt) * gate, dt)
+    return y, new_state

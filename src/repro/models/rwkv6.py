@@ -1,0 +1,185 @@
+"""RWKV-6 "Finch" block: data-dependent decay linear attention (attn-free).
+
+Time mixing (per head, head state S ∈ ℝ^{dh×dh}):
+    w_t = exp(−exp(w0 + lora_w(x̃_w)))       # data-dependent decay (the
+                                              # defining RWKV-6 feature)
+    S_t = diag(w_t) S_{t−1} + k_t v_tᵀ
+    o_t = r_tᵀ (S_{t−1} + diag(u) k_t v_tᵀ)   # u = per-channel bonus
+followed by per-head group-norm and a SiLU output gate.  Token shift uses
+the RWKV-6 dynamic lerp: x̃_* = x + (x_prev − x) ⊙ (μ_* + lora_*(x)).
+
+Channel mixing: k = relu(W_k x̃_k)², out = σ(W_r x̃_r) ⊙ (W_v k).
+
+Train/prefill runs a ``lax.scan`` over time (state is O(H·dh²) per
+sequence); decode is a single state update — O(1) per token, which is what
+makes rwkv6 long_500k-legal.  Norms are RMSNorm (framework-uniform; noted
+as a simplification vs upstream LayerNorm in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init, rmsnorm, rmsnorm_init
+from .config import ModelConfig
+
+__all__ = [
+    "rwkv_time_init",
+    "rwkv_time_apply",
+    "rwkv_channel_init",
+    "rwkv_channel_apply",
+    "rwkv_init_state",
+]
+
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+_LORA = 32
+
+
+def rwkv_time_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    assert d % hd == 0
+    keys = jax.random.split(key, 12)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "mu": {m: jnp.full((d,), 0.5, dt) for m in _MIX_KEYS},
+        "lora_down": dense_init(keys[0], d, _LORA * len(_MIX_KEYS), dtype=dt),
+        "lora_up": jax.random.normal(keys[1], (len(_MIX_KEYS), _LORA, d), dt) * 0.01,
+        "w0": jnp.full((d,), -2.0, dt),
+        "wlora_down": dense_init(keys[2], d, 64, dtype=dt),
+        "wlora_up": jax.random.normal(keys[3], (64, d), dt) * 0.01,
+        "u": jnp.zeros((d,), dt),
+        "r": dense_init(keys[4], d, d, dtype=dt),
+        "k": dense_init(keys[5], d, d, dtype=dt),
+        "v": dense_init(keys[6], d, d, dtype=dt),
+        "g": dense_init(keys[7], d, d, dtype=dt),
+        "o": dense_init(keys[8], d, d, dtype=dt),
+        "ln_x": rmsnorm_init(d, dt),
+    }
+    return p
+
+
+def rwkv_channel_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    kk, kr, kv = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "k": dense_init(kk, d, cfg.d_ff, dtype=dt),
+        "r": dense_init(kr, d, d, dtype=dt),
+        "v": dense_init(kv, cfg.d_ff, d, dtype=dt),
+    }
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_prev_t": jnp.zeros((batch, d), dtype),  # time-mix token shift
+        "x_prev_c": jnp.zeros((batch, d), dtype),  # channel-mix token shift
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """(B, S, D) -> previous-token stream, seeded by carried x_prev."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+
+    x_prev = (
+        jnp.zeros((b, d), x.dtype) if state is None else state["x_prev_t"]
+    )
+    xp = _token_shift(x, x_prev)
+    delta = xp - x
+
+    # Dynamic lerp: μ_* + lora_*(x) per mix stream.
+    lo = jnp.tanh(dense(p["lora_down"], x, dt)).reshape(b, s, len(_MIX_KEYS), _LORA)
+    mixed = {}
+    for idx, m in enumerate(_MIX_KEYS):
+        dyn = jnp.einsum("bsl,ld->bsd", lo[:, :, idx], p["lora_up"][idx].astype(dt))
+        mixed[m] = x + delta * (p["mu"][m].astype(dt) + dyn)
+
+    r = dense(p["r"], mixed["r"], dt).reshape(b, s, h, hd)
+    k = dense(p["k"], mixed["k"], dt).reshape(b, s, h, hd)
+    v = dense(p["v"], mixed["v"], dt).reshape(b, s, h, hd)
+    g = dense(p["g"], mixed["g"], dt)
+
+    # Data-dependent decay w_t ∈ (0, 1).
+    wl = jnp.tanh(dense(p["wlora_down"], mixed["w"], jnp.float32))
+    w_log = p["w0"].astype(jnp.float32) + wl @ p["wlora_up"].astype(jnp.float32)
+    w_t = jnp.exp(-jnp.exp(w_log)).reshape(b, s, h, hd)  # decay per channel
+    u = p["u"].astype(jnp.float32).reshape(h, hd)
+
+    s0 = (
+        jnp.zeros((b, h, hd, hd), jnp.float32)
+        if state is None
+        else state["s"]
+    )
+
+    def step(carry, inp):
+        s_prev = carry  # (B, H, hd, hd)
+        r_t, k_t, v_t, w_tt = inp  # each (B, H, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, hd, hd)
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, s_prev + u[None, :, :, None] * kv
+        )
+        s_new = w_tt[..., :, None] * s_prev + kv
+        return s_new, out
+
+    rs = jnp.moveaxis(r.astype(jnp.float32), 1, 0)  # (S, B, H, hd)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    ws = jnp.moveaxis(w_t, 1, 0)
+    s_last, outs = jax.lax.scan(step, s0, (rs, ks, vs, ws))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)  # (B, S, D)
+
+    out = rmsnorm(p["ln_x"], out.astype(dt), cfg.norm_eps)
+    out = out * jax.nn.silu(g)
+    y = dense(p["o"], out, dt)
+
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["s"] = s_last
+        new_state["x_prev_t"] = x[:, -1, :]
+    return y, new_state
+
+
+def rwkv_channel_apply(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    x_prev = (
+        jnp.zeros((b, d), x.dtype) if state is None else state["x_prev_c"]
+    )
+    xp = _token_shift(x, x_prev)
+    delta = xp - x
+    xk = x + delta * p["mu_k"].astype(dt)
+    xr = x + delta * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(dense(p["k"], xk, dt)))
+    y = jax.nn.sigmoid(dense(p["r"], xr, dt)) * dense(p["v"], k, dt)
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["x_prev_c"] = x[:, -1, :]
+    return y, new_state

@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine."""
+
+from .engine import GenerationResult, ServeEngine
+
+__all__ = ["GenerationResult", "ServeEngine"]

@@ -1,0 +1,32 @@
+"""Training substrate: optimizer, loss, train step, checkpoint, data, FT."""
+
+from .checkpoint import Checkpointer, latest_step, restore_checkpoint, save_checkpoint
+from .data import SyntheticLM, TokenShardStore, batch_for
+from .ft import StepWatchdog, StragglerStats, run_with_retries
+from .loss import softmax_xent
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import constant, warmup_cosine
+from .train_step import TrainStepConfig, init_train_state, make_train_step
+
+__all__ = [
+    "Checkpointer",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "SyntheticLM",
+    "TokenShardStore",
+    "batch_for",
+    "StepWatchdog",
+    "StragglerStats",
+    "run_with_retries",
+    "softmax_xent",
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "constant",
+    "warmup_cosine",
+    "TrainStepConfig",
+    "init_train_state",
+    "make_train_step",
+]

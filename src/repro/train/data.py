@@ -1,0 +1,92 @@
+"""Deterministic data pipeline: synthetic LM streams + binary token shards.
+
+Determinism contract (fault tolerance): ``batch_at(step)`` is a pure
+function of (seed, step) — resuming from a checkpoint at step k replays
+exactly the batches k, k+1, … with no iterator state to persist.  The
+file-backed store memory-maps binary token shards and indexes them with the
+same step arithmetic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from ..models.config import ModelConfig
+
+__all__ = ["SyntheticLM", "TokenShardStore", "batch_for"]
+
+
+class SyntheticLM:
+    """Markov-flavored synthetic token stream (not iid — loss can drop)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0):
+        self.vocab, self.batch, self.seq, self.seed = vocab, batch, seq, seed
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        # A learnable structure: tokens follow t_{i+1} = (a·t_i + b + noise) % V
+        # with (a, b) fixed per stream so the mapping is stationary.
+        a = 31
+        b = int(np.random.default_rng(self.seed).integers(0, self.vocab))
+        t0 = rng.integers(0, self.vocab, size=(self.batch, 1))
+        toks = [t0]
+        for _ in range(self.seq):
+            noise = rng.integers(0, 7, size=(self.batch, 1))
+            toks.append((a * toks[-1] + b + noise) % self.vocab)
+        seq = np.concatenate(toks, axis=1)  # (B, S+1)
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+        }
+
+
+class TokenShardStore:
+    """Flat binary uint32 token shards with step-indexed batch reads."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    @staticmethod
+    def write(path: str, tokens: np.ndarray) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tokens.astype(np.uint32).tofile(path)
+
+    def batch_at(self, step: int, batch: int, seq: int) -> dict:
+        data = np.memmap(self.path, dtype=np.uint32, mode="r")
+        need = batch * (seq + 1)
+        n_slots = max(1, (data.shape[0] - 1) // need)
+        off = (step % n_slots) * need
+        chunk = np.asarray(data[off : off + need])
+        if chunk.shape[0] < need:  # wrap
+            chunk = np.concatenate([chunk, data[: need - chunk.shape[0]]])
+        seqs = chunk.reshape(batch, seq + 1).astype(np.int32)
+        return {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+
+
+def batch_for(
+    cfg: ModelConfig, batch: int, seq: int, step: int, seed: int = 0
+) -> dict:
+    """Family-correct synthetic train batch (embeds stubs included)."""
+    rng = np.random.default_rng((seed << 21) ^ step)
+    if cfg.is_encdec:
+        se = seq // 2
+        st = seq - se
+        lm = SyntheticLM(cfg.vocab_size, batch, st, seed).batch_at(step)
+        return {
+            "src_embeds": rng.normal(0, 0.5, (batch, se, cfg.d_model)).astype(
+                np.float32
+            ),
+            **lm,
+        }
+    if cfg.family == "vlm":
+        f = cfg.frontend_len
+        lm = SyntheticLM(cfg.vocab_size, batch, seq - f, seed).batch_at(step)
+        return {
+            "embeds": rng.normal(0, 0.5, (batch, f, cfg.d_model)).astype(
+                np.float32
+            ),
+            **lm,
+        }
+    return SyntheticLM(cfg.vocab_size, batch, seq, seed).batch_at(step)

@@ -1,0 +1,95 @@
+"""Fault-tolerance orchestration: watchdog, retries, straggler accounting.
+
+On real multi-host deployments the failure modes are (a) hard node loss —
+handled by checkpoint/restart + elastic remesh (``repro.distributed.
+elastic`` + ``checkpoint.restore``), and (b) soft stragglers — steps that
+complete but late.  This module provides the host-side instrumentation for
+both; on the single-host container the mechanisms are exercised by tests
+via injected faults (documented simulation, DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+__all__ = ["StepWatchdog", "run_with_retries", "StragglerStats"]
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    steps: int = 0
+    stragglers: int = 0
+    retries: int = 0
+    failures: int = 0
+    worst_ratio: float = 1.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class StepWatchdog:
+    """EMA-based step-time watchdog.
+
+    A step slower than ``threshold ×`` the EMA is flagged as a straggler.
+    In a real deployment the flag triggers hot-spare substitution /
+    re-execution on the replica group; here it feeds StragglerStats and an
+    optional callback (tests inject sleeps to verify detection).
+    """
+
+    def __init__(self, threshold: float = 3.0, ema: float = 0.9, on_straggler=None):
+        self.threshold = threshold
+        self.ema_coef = ema
+        self.ema: float | None = None
+        self.stats = StragglerStats()
+        self.on_straggler = on_straggler
+
+    def observe(self, dt: float) -> bool:
+        self.stats.steps += 1
+        is_straggler = False
+        if self.ema is not None and dt > self.threshold * self.ema:
+            self.stats.stragglers += 1
+            self.stats.worst_ratio = max(self.stats.worst_ratio, dt / self.ema)
+            is_straggler = True
+            if self.on_straggler:
+                self.on_straggler(dt, self.ema)
+        # Straggler steps don't poison the EMA.
+        if self.ema is None:
+            self.ema = dt
+        elif not is_straggler:
+            self.ema = self.ema_coef * self.ema + (1 - self.ema_coef) * dt
+        return is_straggler
+
+    def timed(self, fn: Callable, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self.observe(time.perf_counter() - t0)
+        return out
+
+
+def run_with_retries(
+    fn: Callable,
+    *args,
+    retries: int = 2,
+    stats: StragglerStats | None = None,
+    recover: Callable | None = None,
+):
+    """Execute ``fn``; on exception, optionally run ``recover`` and retry.
+
+    This is the step-level restart path: ``recover`` typically restores the
+    latest checkpoint and/or re-derives the mesh (elastic downscale).
+    """
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except Exception as e:  # noqa: BLE001 — deliberate containment
+            last = e
+            if stats is not None:
+                stats.retries += 1
+            if recover is not None:
+                args = recover(attempt, e, *args) or args
+    if stats is not None:
+        stats.failures += 1
+    raise last

@@ -1,0 +1,80 @@
+"""Fused unembedding + cross-entropy, chunked over the sequence.
+
+Materializing train logits (B, S, V) in fp32 is the single largest
+activation at 1T scale (kimi: 1 seq × 4096 × 163840 × 4B ≈ 2.7 GB per
+device *per microbatch*).  This computes the unembed matmul and the CE
+reduction together in sequence chunks under ``jax.checkpoint``, so peak
+logit memory is (B, chunk, V) and the backward recomputes each chunk's
+logits instead of storing them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fused_unembed_xent"]
+
+
+def fused_unembed_xent(
+    feats: jax.Array,  # (B, S, D) features aligned with labels
+    labels: jax.Array,  # (B, S) int32; negative = masked
+    unembed: jax.Array,  # (V, D) embedding (tied) or (D, V) head kernel
+    *,
+    transposed: bool,  # True when unembed is (V, D)
+    softcap: float | None = None,
+    z_loss: float = 1e-4,
+    chunk: int = 512,
+) -> tuple[jax.Array, dict]:
+    b, s, d = feats.shape
+    chunk = min(chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    pad = n_chunks * chunk - s
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+
+    fc = jnp.moveaxis(feats.reshape(b, n_chunks, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+
+    def chunk_stats(f, lab):
+        logits = (
+            jnp.einsum("bcd,vd->bcv", f, unembed)
+            if transposed
+            else jnp.einsum("bcd,dv->bcv", f, unembed)
+        ).astype(jnp.float32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = (lab >= 0).astype(jnp.float32)
+        safe = jnp.maximum(lab, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        return (
+            jnp.sum((lse - gold) * mask),
+            jnp.sum(jnp.square(lse) * mask),
+            jnp.sum(mask),
+        )
+
+    body = jax.checkpoint(chunk_stats)
+
+    def scan_body(carry, xs):
+        nll, zsq, cnt = carry
+        f, lab = xs
+        a, bz, c = body(f, lab)
+        return (nll + a, zsq + bz, cnt + c), None
+
+    (nll, zsq, cnt), _ = jax.lax.scan(
+        scan_body,
+        (jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+        (fc, lc),
+    )
+    denom = jnp.maximum(cnt, 1.0)
+    ce = nll / denom
+    zl = zsq / denom * z_loss
+    metrics = {
+        "ce_loss": ce,
+        "z_loss": zl,
+        "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0)),
+        "tokens": cnt,
+    }
+    return ce + zl, metrics

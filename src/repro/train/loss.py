@@ -1,0 +1,31 @@
+"""Cross-entropy + z-loss for LM training (fp32 logits path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_xent"]
+
+
+def softmax_xent(
+    logits: jax.Array,  # (B, S, V) float32
+    labels: jax.Array,  # (B, S) int32, ignore_index < 0 masked out
+    *,
+    z_loss: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    mask = (labels >= 0).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll) / denom
+    zl = jnp.sum(jnp.square(lse) * mask) / denom * z_loss
+    metrics = {
+        "ce_loss": ce,
+        "z_loss": zl,
+        "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0)),
+        "tokens": jnp.sum(mask),
+    }
+    return ce + zl, metrics

@@ -1,0 +1,141 @@
+"""Train-step factory: loss → grads (with microbatch accumulation) → AdamW.
+
+The returned ``train_step(state, batch)`` is a single jit-able function —
+the object the multi-pod dry-run lowers.  Gradient accumulation runs as a
+``lax.scan`` over microbatches (fp32 grad accumulators), which composes
+with the scan-over-layers remat so peak activation memory is
+O(microbatch × one layer group).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.blocks import AUX_KEYS
+from ..models.registry import Model
+from .fused_loss import fused_unembed_xent
+from .loss import softmax_xent
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+
+__all__ = ["TrainStepConfig", "init_train_state", "make_train_step"]
+
+
+class TrainStepConfig:
+    def __init__(
+        self,
+        *,
+        optimizer: AdamWConfig | None = None,
+        schedule_fn: Callable | None = None,
+        grad_accum: int = 1,
+        clip_norm: float = 1.0,
+        z_loss: float = 1e-4,
+        fused_loss: bool = True,
+        loss_chunk: int = 512,
+        accum_dtype: str = "float32",
+    ):
+        self.optimizer = optimizer or AdamWConfig()
+        self.schedule_fn = schedule_fn or (lambda step: jnp.float32(3e-4))
+        self.grad_accum = grad_accum
+        self.clip_norm = clip_norm
+        self.z_loss = z_loss
+        self.fused_loss = fused_loss
+        self.loss_chunk = loss_chunk
+        self.accum_dtype = accum_dtype
+
+
+def init_train_state(model: Model, key: jax.Array, tcfg: TrainStepConfig) -> dict:
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": adamw_init(params, tcfg.optimizer),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(model: Model, tcfg: TrainStepConfig):
+    def loss_fn(params, batch):
+        if tcfg.fused_loss:
+            feats, unembed, transposed, aux = model.train_features(params, batch)
+            loss, metrics = fused_unembed_xent(
+                feats,
+                batch["labels"],
+                unembed,
+                transposed=transposed,
+                softcap=model.cfg.final_logit_softcap,
+                z_loss=tcfg.z_loss,
+                chunk=tcfg.loss_chunk,
+            )
+        else:
+            logits, aux = model.train_logits(params, batch)
+            loss, metrics = softmax_xent(
+                logits, batch["labels"], z_loss=tcfg.z_loss
+            )
+        for k in AUX_KEYS:
+            if k.endswith("loss"):
+                loss = loss + aux[k]
+            metrics[k] = aux[k]
+        metrics["loss"] = loss
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        if tcfg.grad_accum <= 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        a = tcfg.grad_accum
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(a, b // a, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        acc_dt = jnp.dtype(tcfg.accum_dtype)
+
+        def body(carry, mb):
+            acc, _ = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda s, g: s + g.astype(acc_dt) / a, acc, grads
+            )
+            return (acc, metrics), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zeros, _zero_metrics()), micro
+        )
+        return grads, metrics
+
+    def train_step(state: dict, batch: dict):
+        grads, metrics = accumulate(state["params"], batch)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, tcfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = tcfg.schedule_fn(state["step"])
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], state["params"], lr, tcfg.optimizer
+        )
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def _zero_metrics() -> dict:
+    base = {
+        "ce_loss": jnp.float32(0),
+        "z_loss": jnp.float32(0),
+        "ppl_proxy": jnp.float32(0),
+        "tokens": jnp.float32(0),
+        "loss": jnp.float32(0),
+    }
+    for k in AUX_KEYS:
+        base[k] = jnp.float32(0)
+    return base

@@ -1,0 +1,21 @@
+"""Shared fixtures. Deliberately does NOT set XLA_FLAGS — tests must see
+the single real CPU device (the 512-device override is dry-run-only)."""
+
+import numpy as np
+import pytest
+
+from repro.graphs import clustered, erdos, rmat
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    return [
+        erdos(120, 8.0, seed=0),
+        clustered(3, 18, 0.7, seed=1),
+        rmat(7, 5, seed=2),
+    ]
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,87 @@
+"""Graph substrate invariants (+ hypothesis properties)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    CSRGraph,
+    barabasi,
+    clustered,
+    erdos,
+    from_edges,
+    imbalance_stats,
+    rmat,
+    road,
+)
+
+
+def _check_invariants(g: CSRGraph):
+    assert g.rowptr.shape == (g.n + 1,)
+    assert g.rowptr[-1] == g.nnz
+    assert np.all(np.diff(g.rowptr) >= 0)
+    rows = g.row_of_edge()
+    if g.nnz:
+        assert rows.min() >= 1
+        assert g.colidx.min() >= 1  # ids are 1-based; 0 is the sentinel
+        assert np.all(rows < g.colidx)  # strictly upper-triangular
+    for v in range(1, g.n + 1):
+        r = g.colidx[g.rowptr[v - 1] : g.rowptr[v]]
+        assert np.all(np.diff(r) > 0)  # sorted, deduplicated
+
+
+@pytest.mark.parametrize(
+    "g",
+    [
+        erdos(300, 6.0, seed=3),
+        barabasi(400, 3, seed=4),
+        rmat(8, 4, seed=5),
+        road(16, 0.1, seed=6),
+        clustered(4, 16, 0.5, seed=7),
+    ],
+    ids=["er", "ba", "rmat", "road", "clustered"],
+)
+def test_generator_invariants(g):
+    _check_invariants(g)
+    assert g.nnz > 0
+
+
+@given(
+    n=st.integers(2, 40),
+    edges=st.lists(
+        st.tuples(st.integers(0, 39), st.integers(0, 39)), max_size=200
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_from_edges_properties(n, edges):
+    e = np.array([(u % n, v % n) for u, v in edges], dtype=np.int64).reshape(-1, 2)
+    g = from_edges(n, e)
+    _check_invariants(g)
+    # Round trip: rebuilding from the edge list is idempotent.
+    g2 = from_edges(n, g.edge_list() - 1)
+    assert np.array_equal(g.rowptr, g2.rowptr)
+    assert np.array_equal(g.colidx, g2.colidx)
+
+
+def test_undirected_doubles_edges():
+    g = erdos(200, 6.0, seed=8)
+    u = g.undirected_csr()
+    assert u.nnz == 2 * g.nnz
+    assert np.array_equal(np.sort(u.degrees())[::-1], np.sort(u.degrees())[::-1])
+
+
+def test_padded_rows_sentinel_row():
+    g = erdos(50, 4.0, seed=9)
+    pr = g.padded_rows()
+    assert pr.shape[0] == g.n + 1
+    assert np.all(pr[0] == 0)  # the sentinel vertex has no neighbors
+
+
+def test_imbalance_orders_families():
+    """Power-law graphs must show far worse coarse imbalance than grids —
+    the premise of the paper's Fig. 2/3."""
+    s_rmat = imbalance_stats(rmat(10, 8, seed=10))
+    s_road = imbalance_stats(road(32, 0.05, seed=11))
+    assert s_rmat.coarse_imbalance > 5 * s_road.coarse_imbalance
+    assert s_rmat.fine_imbalance < s_rmat.coarse_imbalance
+    assert s_rmat.fine_tasks > s_rmat.coarse_tasks

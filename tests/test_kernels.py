@@ -1,0 +1,101 @@
+"""Pallas kernels vs ref.py oracles (interpret mode), shape/dtype sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import KTrussEngine, ktruss_numpy
+from repro.graphs import clustered, erdos, rmat
+from repro.kernels import ops
+from repro.kernels.ref import support_dense_ref, support_tiles_ref
+from repro.kernels.support_fine import support_fine_pallas
+
+LARGE = 1 << 20
+
+
+def _windows(rng, e, w, universe=4096, fill_frac=0.8):
+    """CSR-realistic windows: strictly ascending unique valid prefix."""
+    vals = np.full((e, w), LARGE, np.int32)
+    ok = np.zeros((e, w), bool)
+    for i in range(e):
+        d = rng.integers(0, w + 1)
+        v = np.sort(rng.choice(np.arange(1, universe), size=d, replace=False))
+        vals[i, :d] = v
+        ok[i, :d] = rng.random(d) < fill_frac
+    return vals, ok
+
+
+@pytest.mark.parametrize("schedule", ["compare", "bsearch"])
+@pytest.mark.parametrize(
+    "e,w,tile",
+    [(128, 128, 64), (256, 256, 128), (512, 128, 256), (128, 512, 128)],
+)
+def test_support_fine_shapes(schedule, e, w, tile):
+    rng = np.random.default_rng(e * w + tile)
+    a, a_ok = _windows(rng, e, w)
+    b, b_ok = _windows(rng, e, w)
+    ref = np.asarray(
+        support_tiles_ref(jnp.asarray(a), jnp.asarray(a_ok), jnp.asarray(b), jnp.asarray(b_ok))
+    )
+    out = np.asarray(
+        support_fine_pallas(
+            jnp.asarray(a), jnp.asarray(a_ok), jnp.asarray(b), jnp.asarray(b_ok),
+            tile=tile, schedule=schedule, interpret=True,
+        )
+    )
+    assert np.array_equal(out, ref)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_support_fine_property(seed):
+    rng = np.random.default_rng(seed)
+    a, a_ok = _windows(rng, 128, 128, universe=300)
+    b, b_ok = _windows(rng, 128, 128, universe=300)
+    args = tuple(jnp.asarray(x) for x in (a, a_ok, b, b_ok))
+    ref = np.asarray(support_tiles_ref(*args))
+    for sched in ("compare", "bsearch"):
+        out = np.asarray(
+            support_fine_pallas(*args, tile=128, schedule=sched, interpret=True)
+        )
+        assert np.array_equal(out, ref), sched
+
+
+@pytest.mark.parametrize("block", [32, 64, 128])
+@pytest.mark.parametrize("v", [96, 128, 200])
+def test_support_dense_blocks(block, v):
+    rng = np.random.default_rng(block + v)
+    u = (rng.random((v, v)) < 0.1).astype(np.float32)
+    u = np.triu(u, 1)
+    u = u + u.T
+    ref = np.asarray(support_dense_ref(jnp.asarray(u)))
+    out = np.asarray(ops.support_dense(jnp.asarray(u), block=block))
+    assert np.allclose(out, ref)
+
+
+def test_pallas_engine_end_to_end():
+    for g in [erdos(120, 9.0, seed=0), rmat(7, 5, seed=1), clustered(3, 16, 0.6, seed=2)]:
+        eng = KTrussEngine(g, granularity="fine", backend="pallas", chunk=256)
+        res = eng.ktruss(3)
+        alive_ref, s_ref = ktruss_numpy(g, 3)
+        assert np.array_equal(res.alive, alive_ref), g.name
+        assert np.array_equal(res.support, s_ref), g.name
+
+
+def test_pallas_bsearch_schedule_engine():
+    """The O(W log W) schedule drives the same fixed point."""
+    import functools
+    from repro.kernels import ops as kops
+
+    g = erdos(100, 8.0, seed=4)
+    eng = KTrussEngine(g, granularity="fine", backend="pallas", chunk=256)
+    eng._support = functools.partial(
+        kops.support_fine, eng.problem, window=eng.window, chunk=eng.chunk,
+        schedule="bsearch",
+    )
+    eng._fixed_point = __import__("jax").jit(eng._fixed_point_impl, static_argnums=(1,))
+    res = eng.ktruss(3)
+    alive_ref, s_ref = ktruss_numpy(g, 3)
+    assert np.array_equal(res.alive, alive_ref)

@@ -1,0 +1,164 @@
+"""Core K-truss correctness: all decompositions/modes vs independent oracles."""
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    KTrussEngine,
+    kmax_numpy,
+    ktruss_dense,
+    ktruss_numpy,
+    prepare_fine,
+    support_coarse_eager,
+    support_fine_eager,
+    support_fine_owner,
+    support_numpy,
+)
+from repro.graphs import CSRGraph, from_edges
+
+import jax.numpy as jnp
+
+
+ALL_VARIANTS = [("fine", "eager"), ("fine", "owner"), ("coarse", "eager")]
+
+
+def _w(g, owner=False):
+    deg = g.undirected_csr().max_degree() if owner else g.max_degree()
+    return max(8, ((deg + 7) // 8) * 8)
+
+
+# ------------------------------------------------------------------ #
+# Support computation == oracle
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("variant", ALL_VARIANTS, ids=["fine-eager", "fine-owner", "coarse"])
+def test_support_matches_oracle(small_graphs, variant):
+    gran, mode = variant
+    for g in small_graphs:
+        p = prepare_fine(g, chunk=256)
+        alive = jnp.asarray(p.colidx != 0)
+        if gran == "coarse":
+            s = support_coarse_eager(p, alive, window=_w(g), row_chunk=16)
+        elif mode == "eager":
+            s = support_fine_eager(p, alive, window=_w(g), chunk=256)
+        else:
+            s = support_fine_owner(p, alive, window=_w(g, owner=True), chunk=256)
+        assert np.array_equal(np.asarray(s)[: g.nnz], support_numpy(g)), g.name
+
+
+def test_support_on_pruned_graph(small_graphs):
+    """Alive-masked supports must agree across variants mid-convergence."""
+    g = small_graphs[1]
+    p = prepare_fine(g, chunk=256)
+    rng = np.random.default_rng(0)
+    alive_np = rng.random(p.nnz_pad) < 0.7
+    alive_np &= np.asarray(p.colidx) != 0
+    alive = jnp.asarray(alive_np)
+    ref = support_numpy(g, alive_np[: g.nnz])
+    s1 = np.asarray(support_fine_eager(p, alive, window=_w(g), chunk=256))[: g.nnz]
+    s2 = np.asarray(support_fine_owner(p, alive, window=_w(g, True), chunk=256))[: g.nnz]
+    s3 = np.asarray(support_coarse_eager(p, alive, window=_w(g), row_chunk=8))[: g.nnz]
+    live = alive_np[: g.nnz]
+    assert np.array_equal(s1 * live, ref * live)
+    assert np.array_equal(s2 * live, ref * live)
+    assert np.array_equal(s3 * live, ref * live)
+
+
+# ------------------------------------------------------------------ #
+# Fixed point + kmax vs oracles (incl. networkx)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("variant", ALL_VARIANTS, ids=["fine-eager", "fine-owner", "coarse"])
+def test_ktruss_fixed_point(small_graphs, variant):
+    gran, mode = variant
+    for g in small_graphs:
+        eng = KTrussEngine(g, granularity=gran, mode=mode, chunk=256)
+        for k in (3, 4):
+            res = eng.ktruss(k)
+            alive_ref, s_ref = ktruss_numpy(g, k)
+            assert np.array_equal(res.alive, alive_ref)
+            assert np.array_equal(res.support, s_ref)
+
+
+def test_ktruss_matches_networkx():
+    g = from_edges(
+        60, np.random.default_rng(3).integers(0, 60, size=(400, 2))
+    )
+    eng = KTrussEngine(g, granularity="fine", mode="eager", chunk=256)
+    edges = g.edge_list() - 1  # back to 0-based
+    nxg = nx.Graph(list(map(tuple, edges)))
+    for k in (3, 4, 5):
+        res = eng.ktruss(k)
+        ours = {tuple(e) for e, a in zip(map(tuple, edges), res.alive) if a}
+        theirs = set()
+        for u, v in nx.k_truss(nxg, k).edges():
+            theirs.add((min(u, v), max(u, v)))
+        assert ours == theirs, f"k={k}"
+
+
+def test_kmax_warm_start(small_graphs):
+    for g in small_graphs[:2]:
+        eng = KTrussEngine(g, granularity="fine", mode="owner", chunk=256)
+        km, _ = eng.kmax()
+        assert km == kmax_numpy(g)
+
+
+def test_dense_reference_agrees(small_graphs):
+    g = small_graphs[0]
+    u = g.dense_upper()
+    u = jnp.asarray(u + u.T)
+    adj, s = ktruss_dense(u, 3)
+    alive_ref, s_ref = ktruss_numpy(g, 3)
+    rows, cols = g.row_of_edge(), g.colidx
+    assert np.array_equal(np.asarray(adj)[rows, cols] > 0, alive_ref)
+    assert np.array_equal(np.asarray(s)[rows, cols], s_ref)
+
+
+# ------------------------------------------------------------------ #
+# Properties (hypothesis)
+# ------------------------------------------------------------------ #
+@given(
+    n=st.integers(4, 24),
+    m=st.integers(0, 80),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_modes_agree(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    if g.nnz == 0:
+        return
+    p = prepare_fine(g, chunk=64)
+    alive = jnp.asarray(p.colidx != 0)
+    s_e = np.asarray(support_fine_eager(p, alive, window=_w(g), chunk=64))
+    s_o = np.asarray(support_fine_owner(p, alive, window=_w(g, True), chunk=64))
+    assert np.array_equal(s_e, s_o)  # ownership == eager (DESIGN §4)
+
+
+@given(n=st.integers(5, 20), m=st.integers(5, 60), seed=st.integers(0, 9999))
+@settings(max_examples=15, deadline=None)
+def test_property_truss_is_maximal_and_stable(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    if g.nnz == 0:
+        return
+    eng = KTrussEngine(g, granularity="fine", mode="eager", chunk=64)
+    res = eng.ktruss(3)
+    # Every surviving edge has support ≥ 1 within the surviving subgraph.
+    s = support_numpy(g, res.alive)
+    assert np.all(s[res.alive] >= 1)
+    # Fixed point: running again changes nothing.
+    pad = eng.problem.nnz_pad - g.nnz
+    res2 = eng.ktruss(3, alive0=jnp.asarray(np.pad(res.alive, (0, pad))))
+    assert np.array_equal(res.alive, res2.alive)
+
+
+def test_bucketed_fine_matches_oracle(small_graphs):
+    """Degree-bucketed windows (beyond-paper §Perf-ktruss) are exact."""
+    for g in small_graphs:
+        eng = KTrussEngine(g, bucketed=True, chunk=256)
+        for k in (3, 4):
+            res = eng.ktruss(k)
+            alive_ref, s_ref = ktruss_numpy(g, k)
+            assert np.array_equal(res.alive, alive_ref), (g.name, k)
+            assert np.array_equal(res.support, s_ref), (g.name, k)

@@ -1,0 +1,54 @@
+"""Sharded (shard_map EP, tiled grouped GEMM) MoE vs local path.
+
+Runs in a subprocess so the 8-device host-platform override never leaks
+into the rest of the suite (tests must see 1 device).
+"""
+
+import json
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.config import MoEConfig
+from repro.models.moe import moe_apply, moe_init
+from repro.distributed.context import sharding_context
+
+base = get_config("kimi-k2-1t-a32b", smoke=True)
+out = {}
+for disp in ("fine", "coarse"):
+    cfg = base.replace(d_model=64, moe=MoEConfig(
+        num_experts=8, top_k=2, d_ff_expert=32, dispatch=disp,
+        buffer_factor=4.0, capacity_factor=8.0))
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 64)), jnp.float32)
+    y_local, _ = moe_apply(p, x, cfg)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    with sharding_context(mesh):
+        y_shard, aux = jax.jit(lambda pp, xx: moe_apply(pp, xx, cfg))(p, x)
+    out[disp] = {
+        "err": float(jnp.max(jnp.abs(y_local.astype(jnp.float32) - y_shard.astype(jnp.float32)))),
+        "drop": float(aux["moe_drop_frac"]),
+    }
+print("RESULT " + __import__("json").dumps(out))
+"""
+
+
+def test_sharded_moe_matches_local():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    for disp in ("fine", "coarse"):
+        assert out[disp]["err"] < 2e-2, (disp, out)
+        assert out[disp]["drop"] == 0.0, (disp, out)

@@ -1,0 +1,67 @@
+"""Serving engine: greedy determinism, decode == step-by-step, EOS stop."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serve import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="qwen2-0.5b"):
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def test_greedy_reproducible():
+    cfg, model, params = _setup()
+    prompt = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(1, cfg.vocab_size, (3, 8)), jnp.int32)}
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(model, params, max_len=24, seed=7)
+        outs.append(eng.generate(prompt, max_new_tokens=8).tokens)
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_generate_matches_manual_decode():
+    cfg, model, params = _setup()
+    toks = jnp.asarray(np.random.default_rng(1).integers(1, cfg.vocab_size, (2, 6)), jnp.int32)
+    eng = ServeEngine(model, params, max_len=16)
+    got = eng.generate({"tokens": toks}, max_new_tokens=4).tokens
+
+    last, states = model.prefill(params, {"tokens": toks}, max_len=16)
+    cur = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    manual = [np.asarray(cur)]
+    for i in range(3):
+        lg, states = model.decode(params, cur, states, 6 + i)
+        cur = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        manual.append(np.asarray(cur))
+    assert np.array_equal(got, np.concatenate(manual, 1))
+
+
+def test_eos_early_stop():
+    cfg, model, params = _setup()
+    toks = jnp.asarray(np.random.default_rng(2).integers(1, cfg.vocab_size, (2, 4)), jnp.int32)
+    eng = ServeEngine(model, params, max_len=64, eos_id=None)
+    full = eng.generate({"tokens": toks}, max_new_tokens=10).tokens
+    # Pick the token generated at position 1 as "EOS" — generation must halt.
+    eos = int(full[0, 1])
+    eng2 = ServeEngine(model, params, max_len=64, eos_id=eos)
+    short = eng2.generate({"tokens": toks}, max_new_tokens=10).tokens
+    assert short.shape[1] <= full.shape[1]
+
+
+def test_temperature_sampling_runs():
+    cfg, model, params = _setup()
+    toks = jnp.asarray(np.random.default_rng(3).integers(1, cfg.vocab_size, (2, 4)), jnp.int32)
+    eng = ServeEngine(model, params, max_len=16, seed=3)
+    out = eng.generate({"tokens": toks}, max_new_tokens=4, temperature=1.0)
+    assert out.tokens.shape == (2, 4)
+    assert out.decode_tokens_per_s() > 0

@@ -1,0 +1,55 @@
+"""Flat-task index math (shared by K-truss and MoE dispatch)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import batched_searchsorted, row_of_task, segment_offsets, window_gather
+
+
+@given(
+    rows=st.lists(st.integers(0, 6), min_size=1, max_size=20),
+)
+@settings(max_examples=50, deadline=None)
+def test_row_of_task_inverts_rowptr(rows):
+    rowptr = np.concatenate([[0], np.cumsum(rows)]).astype(np.int32)
+    nnz = int(rowptr[-1])
+    if nnz == 0:
+        return
+    t = jnp.arange(nnz, dtype=jnp.int32)
+    got = np.asarray(row_of_task(jnp.asarray(rowptr), t))
+    want = np.searchsorted(rowptr, np.arange(nnz), side="right")
+    assert np.array_equal(got, want)
+    # Every task's row contains it: rowptr[r-1] <= t < rowptr[r].
+    assert np.all(rowptr[got - 1] <= np.arange(nnz))
+    assert np.all(np.arange(nnz) < rowptr[got])
+
+
+@given(
+    data=st.data(),
+    e=st.integers(1, 8),
+    w=st.integers(1, 33),
+    q=st.integers(1, 17),
+)
+@settings(max_examples=60, deadline=None)
+def test_batched_searchsorted_matches_numpy(data, e, w, q):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    b = np.sort(rng.integers(0, 50, size=(e, w)), axis=1).astype(np.int32)
+    queries = rng.integers(-5, 55, size=(e, q)).astype(np.int32)
+    got = np.asarray(batched_searchsorted(jnp.asarray(b), jnp.asarray(queries)))
+    want = np.stack([np.searchsorted(b[i], queries[i]) for i in range(e)])
+    assert np.array_equal(got, want)
+
+
+def test_segment_offsets_roundtrip():
+    ids = jnp.asarray(np.repeat(np.arange(5), [3, 0, 2, 4, 1]).astype(np.int32))
+    offs = np.asarray(segment_offsets(ids, 5))
+    assert np.array_equal(np.diff(offs), [3, 0, 2, 4, 1])
+
+
+def test_window_gather_bounds():
+    flat = jnp.arange(10, dtype=jnp.int32)
+    out = np.asarray(window_gather(flat, jnp.asarray([-2, 8]), 4, fill=-1))
+    assert np.array_equal(out[0], [-1, -1, 0, 1])
+    assert np.array_equal(out[1], [8, 9, -1, -1])
