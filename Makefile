@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke lint
+
+# Tier-1 verify (see ROADMAP.md).
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Tiny serving benchmark: 6 small graphs, batch widths 1 and 2.
+bench-smoke:
+	$(PYTHON) -m benchmarks.service_bench --smoke
+
+# Byte-compile everything (import/syntax gate; no extra tooling required).
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks examples

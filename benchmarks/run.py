@@ -9,6 +9,7 @@ tables.  Sections:
   moe       — beyond-paper: coarse vs fine MoE dispatch
   kernels   — Pallas kernel structural models + interpret-mode checks
   roofline  — §Roofline terms per (arch × shape) from the dry-run JSONL
+  service   — TrussService throughput + compile-cache hit rate (batch sweep)
 """
 
 from __future__ import annotations
@@ -84,6 +85,12 @@ def main() -> None:
             print(r)
         for r in kernels_bench.run_kernel_bench():
             print(r)
+
+    if only in (None, "service"):
+        _section("service (batched serving: graphs/s + cache hit rate)")
+        from . import service_bench
+
+        service_bench.report(service_bench.run_service_bench())
 
     if only in (None, "roofline"):
         _section("roofline (from dry-run artifacts)")

@@ -1,0 +1,144 @@
+"""Serving-layer benchmark: throughput + compile-cache hit rate.
+
+A mixed stream of graphs drawn from the generator suite families is
+submitted to :class:`repro.service.TrussService` and flushed; per batch
+width B ∈ {1, 4, 8} we report graphs/s end-to-end (submit → all futures
+resolved), the compile-cache hit rate, and the queue/pack/device time
+split.  The stream repeats each family with distinct seeds, so hits come
+from shape-bucket canonicalization (different graphs, same bucket), not
+from literal input reuse.
+
+Modes:
+  * small (default) — laptop-scale members of each suite family; the smoke
+    target for ``benchmarks/run.py service`` and ``make bench-smoke``.
+  * ``--full``      — the actual ``graphs.generators.suite()`` graphs
+    (rmat-16/er-mid scale; minutes on CPU).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.graphs import CSRGraph, barabasi, clustered, erdos, rmat, road, suite
+from repro.service import TrussService
+
+__all__ = ["build_stream", "run_service_bench", "report"]
+
+# Small-scale members of the suite's five families (distinct seeds per
+# repeat so the stream is genuinely mixed).
+_SMALL_FAMILIES = (
+    ("er", lambda s: erdos(400, 7.0, seed=s)),
+    ("ba", lambda s: barabasi(500, 4, seed=s)),
+    ("clustered", lambda s: clustered(6, 24, 0.5, seed=s)),
+    ("road", lambda s: road(24, 0.08, seed=s)),
+    ("rmat", lambda s: rmat(8, 5, seed=s)),
+)
+
+
+def build_stream(num_graphs: int = 20, *, full: bool = False) -> list[CSRGraph]:
+    """A mixed stream of ``num_graphs`` suite-family graphs."""
+    if full:
+        base = suite()
+        return [base[i % len(base)] for i in range(num_graphs)]
+    out = []
+    for i in range(num_graphs):
+        name, fac = _SMALL_FAMILIES[i % len(_SMALL_FAMILIES)]
+        g = fac(100 + i)
+        out.append(CSRGraph(g.n, g.rowptr, g.colidx, name=f"{name}-{i}"))
+    return out
+
+
+def _submit_wave(svc: TrussService, stream, k: int, kmax_every: int):
+    futs = []
+    for i, g in enumerate(stream):
+        if kmax_every and i % kmax_every == kmax_every - 1:
+            futs.append(svc.submit_kmax(g))
+        else:
+            futs.append(svc.submit_ktruss(g, k))
+    svc.flush()
+    assert all(f.done() for f in futs)
+    return futs
+
+
+def run_service_bench(
+    num_graphs: int = 20,
+    batch_sizes: tuple[int, ...] = (1, 4, 8),
+    *,
+    full: bool = False,
+    k: int = 3,
+    kmax_every: int = 5,
+    chunk: int = 256,
+) -> list[dict]:
+    """One row per batch width: cold + warm throughput, hit rate, time split.
+
+    The cold wave pays every bucket's compile; the warm wave (a second burst
+    of the same traffic mix against the now-populated cache) is the
+    steady-state number a long-running server sees.
+    """
+    stream = build_stream(num_graphs, full=full)
+    rows = []
+    for b in batch_sizes:
+        svc = TrussService(max_batch=b, chunk=chunk)
+        t0 = time.perf_counter()
+        cold = _submit_wave(svc, stream, k, kmax_every)
+        cold_wall = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        warm = _submit_wave(svc, stream, k, kmax_every)
+        warm_wall = time.perf_counter() - t1
+        st = svc.stats()
+        futs = cold + warm
+        queue = [f.stats.queue_time_s for f in futs]
+        pack = [f.stats.pack_time_s for f in futs]
+        rows.append(
+            {
+                "batch": b,
+                "graphs": len(stream),
+                "cold_graphs_per_s": round(len(stream) / cold_wall, 3),
+                "warm_graphs_per_s": round(len(stream) / warm_wall, 3),
+                "batches": st["batches_run"],
+                "compiles": st["cache_compiles"],
+                "cache_hits": st["cache_hits"],
+                "hit_rate": st["cache_hit_rate"],
+                # Fraction of requests that never paid a compile — the
+                # amortization batching buys on top of caching.
+                "req_hit_rate": round(
+                    float(np.mean([f.stats.compile_hit for f in futs])), 4
+                ),
+                "device_s": st["device_time_s"],
+                "mean_queue_ms": round(1e3 * float(np.mean(queue)), 3),
+                "mean_pack_ms": round(1e3 * float(np.mean(pack)), 3),
+            }
+        )
+    return rows
+
+
+def report(rows: list[dict]) -> None:
+    """CSV table + one ``bench,...`` summary line per batch width."""
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    for r in rows:
+        print(
+            f"bench,service_b{r['batch']},{r['warm_graphs_per_s']},"
+            f"hit_rate={r['hit_rate']}"
+        )
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    smoke = "--smoke" in sys.argv
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    num = int(args[0]) if args else (6 if smoke else 20)
+    if smoke:
+        rows = run_service_bench(num, batch_sizes=(1, 2), chunk=64)
+    else:
+        rows = run_service_bench(num, full=full)
+    report(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ from .eager_fine import (
     support_fine_bucketed,
     support_fine_eager,
     support_fine_owner,
+    support_fine_stacked,
 )
 from .reference import (
     kmax_numpy,
@@ -23,7 +24,7 @@ from .taskmap import (
     sorted_window_member,
     window_gather,
 )
-from .truss import KTrussEngine, KTrussResult, make_support_fn
+from .truss import KTrussEngine, KTrussResult, TrussDecomposition, make_support_fn
 
 __all__ = [
     "support_coarse_eager",
@@ -33,6 +34,7 @@ __all__ = [
     "support_fine_bucketed",
     "support_fine_eager",
     "support_fine_owner",
+    "support_fine_stacked",
     "kmax_numpy",
     "ktruss_dense",
     "ktruss_numpy",
@@ -45,5 +47,6 @@ __all__ = [
     "window_gather",
     "KTrussEngine",
     "KTrussResult",
+    "TrussDecomposition",
     "make_support_fn",
 ]

@@ -25,6 +25,7 @@ processed in chunks of ``chunk`` via ``lax.scan`` to bound memory.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -39,6 +40,7 @@ __all__ = [
     "prepare_fine",
     "support_fine_eager",
     "support_fine_owner",
+    "support_fine_stacked",
 ]
 
 
@@ -74,23 +76,40 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def prepare_fine(g: CSRGraph, chunk: int = 1024) -> FineProblem:
-    """Host-side packing of a CSR graph into :class:`FineProblem` arrays."""
-    nnzp = max(_round_up(g.nnz, chunk), chunk)
+def prepare_fine(
+    g: CSRGraph,
+    chunk: int = 1024,
+    *,
+    nnz_pad: int | None = None,
+    unnz_pad: int | None = None,
+) -> FineProblem:
+    """Host-side packing of a CSR graph into :class:`FineProblem` arrays.
+
+    ``nnz_pad``/``unnz_pad`` override the default round-up-to-chunk padding
+    with explicit targets so callers (the serving compile cache) can
+    canonicalize many graphs onto one static shape.
+    """
+    nnzp = max(_round_up(g.nnz, chunk), chunk) if nnz_pad is None else int(nnz_pad)
+    if nnzp < g.nnz or nnzp % chunk:
+        raise ValueError(f"nnz_pad={nnzp} must be a chunk multiple >= nnz={g.nnz}")
     d = g.device_csr(nnzp)
     u = g.undirected_csr()
-    unnzp = max(_round_up(u.nnz, chunk), chunk)
+    unnzp = max(_round_up(u.nnz, chunk), chunk) if unnz_pad is None else int(unnz_pad)
+    if unnzp < u.nnz:
+        raise ValueError(f"unnz_pad={unnzp} < undirected nnz={u.nnz}")
 
     # Map undirected nonzeros to directed edge ids: entry (a,b) of the
-    # symmetric CSR corresponds to directed edge (min(a,b), max(a,b)); its
-    # directed index is found by binary search inside that row's slice.
+    # symmetric CSR corresponds to directed edge (min(a,b), max(a,b)).  The
+    # directed nonzeros are globally sorted under the composite key
+    # row * (n + 2) + col (rows ascending, colidx ascending within a row),
+    # so one vectorized searchsorted over those keys resolves every
+    # undirected entry at once — no per-edge Python loop.
     urows = u.row_of_edge()
-    lo = np.minimum(urows, u.colidx)
-    hi = np.maximum(urows, u.colidx)
-    u2d = np.empty(u.nnz, dtype=np.int64)
-    for t in range(u.nnz):
-        s, e = g.rowptr[lo[t] - 1], g.rowptr[lo[t]]
-        u2d[t] = s + np.searchsorted(g.colidx[s:e], hi[t])
+    lo = np.minimum(urows, u.colidx).astype(np.int64)
+    hi = np.maximum(urows, u.colidx).astype(np.int64)
+    stride = np.int64(g.n + 2)
+    dkeys = g.row_of_edge().astype(np.int64) * stride + g.colidx
+    u2d = np.searchsorted(dkeys, lo * stride + hi)
     pad_u = unnzp - u.nnz
 
     return FineProblem(
@@ -295,3 +314,33 @@ def support_fine_owner(
     starts = jnp.arange(0, nnzp, chunk, dtype=jnp.int32)
     _, s_chunks = jax.lax.scan(body, None, starts)
     return s_chunks.reshape(-1)
+
+
+# ---------------------------------------------------------------------- #
+# Batched entry point: many same-shape graphs in one device dispatch
+# ---------------------------------------------------------------------- #
+def support_fine_stacked(
+    p: FineProblem,
+    alive: jax.Array,
+    *,
+    window: int,
+    chunk: int = 1024,
+    mode: str = "eager",
+) -> jax.Array:
+    """``alive -> support`` over a leading batch axis.
+
+    ``p`` is a :class:`FineProblem` whose every field carries a leading
+    ``(B, ...)`` batch dimension (see ``repro.graphs.pack.stack_problems``)
+    and ``alive`` is ``(B, nnzp)``.  All B graphs must share one shape
+    bucket; the batch is sequenced through one compiled program via
+    ``lax.map`` so a micro-batch costs one dispatch, not B.
+
+    Returns (B, nnzp) int32 supports.
+    """
+    if mode == "eager":
+        fn = functools.partial(support_fine_eager, window=window, chunk=chunk)
+    elif mode == "owner":
+        fn = functools.partial(support_fine_owner, window=window, chunk=chunk)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return jax.lax.map(lambda pa: fn(pa[0], pa[1]), (p, alive))

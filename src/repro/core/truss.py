@@ -35,7 +35,7 @@ from .eager_fine import (
     support_fine_owner,
 )
 
-__all__ = ["KTrussResult", "KTrussEngine", "make_support_fn"]
+__all__ = ["KTrussResult", "TrussDecomposition", "KTrussEngine", "make_support_fn"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -49,6 +49,21 @@ class KTrussResult:
     support: np.ndarray  # (nnz,) int32 (post-prune supports)
     iterations: int
     edges_remaining: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TrussDecomposition:
+    """Full truss decomposition: the trussness of every edge.
+
+    ``trussness[e]`` is the largest k such that edge e belongs to the
+    k-truss; every edge is trivially in the 2-truss, so values are >= 2
+    (PKT-style decomposition — the workload users actually want, not just
+    one-k membership).
+    """
+
+    trussness: np.ndarray  # (nnz,) int32, >= 2
+    kmax: int  # max(trussness) (0 on edgeless graphs)
+    levels: int  # number of fixed-point levels peeled
 
 
 def make_support_fn(
@@ -185,17 +200,44 @@ class KTrussEngine:
             edges_remaining=int(alive_np.sum()),
         )
 
-    def kmax(self, k_start: int = 3) -> tuple[int, list[KTrussResult]]:
-        """Largest k with non-empty truss, warm-starting each k from k-1."""
-        results: list[KTrussResult] = []
+    def _peel(self, k_start: int = 3):
+        """Yield (k, result) per level, warm-starting each k from the
+        (k-1)-truss; ends after the first level whose truss is empty."""
         alive = self.initial_alive()
-        k, kmax = k_start, 0
+        k = k_start
         while bool(np.asarray(alive).any()):
             res = self.ktruss(k, alive0=alive)
-            if res.edges_remaining:
-                kmax = k
-                results.append(res)
+            yield k, res
             pad = self.problem.nnz_pad - self.g.nnz
             alive = jnp.asarray(np.pad(res.alive, (0, pad)))
             k += 1
+
+    def kmax(self, k_start: int = 3) -> tuple[int, list[KTrussResult]]:
+        """Largest k with non-empty truss, warm-starting each k from k-1."""
+        results: list[KTrussResult] = []
+        kmax = 0
+        for k, res in self._peel(k_start):
+            if res.edges_remaining:
+                kmax = k
+                results.append(res)
         return kmax, results
+
+    def decompose(self, k_start: int = 3) -> TrussDecomposition:
+        """Full truss decomposition via the same level peel as :meth:`kmax`.
+
+        An edge's trussness is the last k whose truss still contains it;
+        edges never reaching the ``k_start``-truss keep trussness
+        ``k_start - 1`` (= 2 by default: membership in the 2-truss is
+        vacuous).
+        """
+        nnz = self.g.nnz
+        trussness = np.full(nnz, max(2, k_start - 1), dtype=np.int32)
+        levels = 0
+        for k, res in self._peel(k_start):
+            trussness[res.alive] = k
+            levels += 1
+        return TrussDecomposition(
+            trussness=trussness,
+            kmax=int(trussness.max(initial=0)) if nnz else 0,
+            levels=levels,
+        )

@@ -2,6 +2,13 @@
 
 from .csr import CSRGraph, DeviceCSR, build_upper_csr, from_edges
 from .generators import barabasi, clustered, erdos, rmat, road, suite, SUITE_SPECS
+from .pack import (
+    PackedGraph,
+    PackedProblem,
+    pack_graphs,
+    pack_problems,
+    stack_problems,
+)
 from .stats import ImbalanceStats, coarse_task_work, fine_task_work, imbalance_stats
 
 __all__ = [
@@ -9,6 +16,11 @@ __all__ = [
     "DeviceCSR",
     "build_upper_csr",
     "from_edges",
+    "PackedGraph",
+    "PackedProblem",
+    "pack_graphs",
+    "pack_problems",
+    "stack_problems",
     "barabasi",
     "clustered",
     "erdos",

@@ -1,0 +1,138 @@
+"""Block-diagonal packing of many graphs into one static-shape problem.
+
+The serving layer batches same-bucket requests by placing each member graph
+on its own vertex *slot* of width ``slot_n``: member ``i``'s 1-based vertex
+``v`` becomes ``i * slot_n + v`` in the packed id space.  The packed
+adjacency is the disjoint union, so every K-truss quantity (support,
+fixed-point alive mask, trussness) of the union restricted to a member's
+edge range equals the quantity computed on that member alone — components
+never interact.  One device dispatch therefore serves B requests.
+
+Shapes are fully determined by ``(slots, slot_n, slot_nnz)``: rowptr is
+``(slots * slot_n + 1,)`` and colidx ``(slots * slot_nnz,)`` regardless of
+which graphs occupy the slots, which is exactly what the compile cache
+needs to reuse one XLA/Pallas executable across batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .csr import CSRGraph
+
+__all__ = ["PackedGraph", "PackedProblem", "pack_graphs", "pack_problems", "stack_problems"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedGraph:
+    """Disjoint union of member graphs on a fixed vertex grid."""
+
+    graph: CSRGraph
+    slot_n: int
+    slots: int
+    # Member i's real (unpadded) edges occupy colidx[edge_ranges[i][0]:edge_ranges[i][1]].
+    edge_ranges: tuple[tuple[int, int], ...]
+
+    @property
+    def num_members(self) -> int:
+        return len(self.edge_ranges)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedProblem:
+    """A :class:`PackedGraph` lowered to device-ready ``FineProblem`` arrays."""
+
+    problem: "FineProblem"  # noqa: F821 - repro.core.eager_fine.FineProblem
+    packed: PackedGraph
+    slot_nnz: int
+
+    @property
+    def edge_ranges(self) -> tuple[tuple[int, int], ...]:
+        return self.packed.edge_ranges
+
+
+def pack_graphs(
+    graphs: list[CSRGraph] | tuple[CSRGraph, ...],
+    *,
+    slot_n: int | None = None,
+    slots: int | None = None,
+    name: str = "packed",
+) -> PackedGraph:
+    """Block-diagonal union of ``graphs`` on a ``slots × slot_n`` vertex grid.
+
+    Unused slots (when ``len(graphs) < slots``) and the tail vertices of
+    each slot are isolated, so padding batches to a fixed slot count keeps
+    shapes — and hence compiled executables — stable.
+    """
+    if not graphs:
+        raise ValueError("pack_graphs needs at least one graph")
+    b = int(slots if slots is not None else len(graphs))
+    sn = int(slot_n if slot_n is not None else max(g.n for g in graphs))
+    if len(graphs) > b:
+        raise ValueError(f"{len(graphs)} graphs > {b} slots")
+    if any(g.n > sn for g in graphs):
+        raise ValueError(f"member graph exceeds slot_n={sn}")
+    if b * sn + 1 >= np.iinfo(np.int32).max:
+        raise ValueError("packed vertex space overflows int32")
+
+    counts = np.zeros(b * sn + 1, dtype=np.int64)
+    col_parts: list[np.ndarray] = []
+    edge_ranges: list[tuple[int, int]] = []
+    at = 0
+    for i, g in enumerate(graphs):
+        counts[i * sn + 1 : i * sn + g.n + 1] = np.diff(g.rowptr)
+        col_parts.append(g.colidx.astype(np.int64) + i * sn)
+        edge_ranges.append((at, at + g.nnz))
+        at += g.nnz
+    colidx = (
+        np.concatenate(col_parts) if col_parts else np.zeros(0, np.int64)
+    ).astype(np.int32)
+    union = CSRGraph(b * sn, np.cumsum(counts), colidx, name=name)
+    return PackedGraph(
+        graph=union, slot_n=sn, slots=b, edge_ranges=tuple(edge_ranges)
+    )
+
+
+def pack_problems(
+    graphs: list[CSRGraph] | tuple[CSRGraph, ...],
+    *,
+    slot_n: int,
+    slot_nnz: int,
+    slots: int | None = None,
+    chunk: int = 256,
+) -> PackedProblem:
+    """Pack ``graphs`` into one block-diagonal ``FineProblem``.
+
+    The packed arrays are padded to ``slots * slot_nnz`` directed nonzeros
+    (and twice that undirected), so every batch drawn from the same
+    ``(slot_n, slot_nnz, slots)`` bucket shares one executable.
+    """
+    from ..core.eager_fine import prepare_fine  # lazy: graphs stays core-free
+
+    b = int(slots if slots is not None else len(graphs))
+    total = sum(g.nnz for g in graphs)
+    if total > b * slot_nnz:
+        raise ValueError(f"batch nnz={total} > {b} * slot_nnz={slot_nnz}")
+    if (b * slot_nnz) % chunk:
+        raise ValueError(f"slots*slot_nnz={b * slot_nnz} not a multiple of chunk={chunk}")
+    pg = pack_graphs(graphs, slot_n=slot_n, slots=b)
+    problem = prepare_fine(
+        pg.graph, chunk=chunk, nnz_pad=b * slot_nnz, unnz_pad=2 * b * slot_nnz
+    )
+    return PackedProblem(problem=problem, packed=pg, slot_nnz=int(slot_nnz))
+
+
+def stack_problems(problems):
+    """Stack same-shape ``FineProblem``s along a new leading batch axis.
+
+    Input to the ``support_fine_stacked`` batched entry points; all members
+    must come from one shape bucket (identical array shapes).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not problems:
+        raise ValueError("stack_problems needs at least one problem")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *problems)

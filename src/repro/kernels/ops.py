@@ -19,7 +19,7 @@ from ..core.eager_fine import FineProblem
 from .support_dense import support_dense_pallas
 from .support_fine import support_fine_pallas
 
-__all__ = ["support_fine", "support_dense", "on_tpu"]
+__all__ = ["support_fine", "support_fine_stacked", "support_dense", "on_tpu"]
 
 _LANES = 128
 
@@ -89,6 +89,34 @@ def support_fine(
     starts = jnp.arange(0, nnzp, chunk, dtype=jnp.int32)
     _, s_chunks = jax.lax.scan(body, None, starts)
     return s_chunks.reshape(-1)
+
+
+def support_fine_stacked(
+    p: FineProblem,
+    alive: jax.Array,
+    *,
+    window: int,
+    chunk: int = 1024,
+    tile: int = 256,
+    schedule: str = "compare",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched Pallas ``alive -> support`` over a leading batch axis.
+
+    Mirrors :func:`repro.core.eager_fine.support_fine_stacked` for the
+    kernel backend: ``p``'s fields carry a leading ``(B, ...)`` dimension
+    (same shape bucket for all members) and the batch runs through one
+    ``lax.map``-sequenced program — one dispatch per micro-batch.
+    """
+    fn = functools.partial(
+        support_fine,
+        window=window,
+        chunk=chunk,
+        tile=tile,
+        schedule=schedule,
+        interpret=interpret,
+    )
+    return jax.lax.map(lambda pa: fn(pa[0], pa[1]), (p, alive))
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

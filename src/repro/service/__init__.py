@@ -1,0 +1,28 @@
+"""Batched multi-graph K-truss serving subsystem.
+
+Layers (bottom-up):
+
+* :mod:`.cache`   — shape-bucket canonicalization + compile cache (one
+                    XLA/Pallas executable per power-of-two bucket).
+* :mod:`.batcher` — request queue + same-bucket micro-batcher over the
+                    block-diagonal packing in :mod:`repro.graphs.pack`.
+* :mod:`.service` — ``TrussService``: submit/poll futures, per-request
+                    stats, ``ktruss(k)`` / ``kmax()`` / ``decompose()``
+                    workloads.
+"""
+
+from .batcher import MicroBatcher, Request, RequestStats
+from .cache import Bucket, CompileCache, bucket_for, build_fixed_point
+from .service import TrussFuture, TrussService
+
+__all__ = [
+    "MicroBatcher",
+    "Request",
+    "RequestStats",
+    "Bucket",
+    "CompileCache",
+    "bucket_for",
+    "build_fixed_point",
+    "TrussFuture",
+    "TrussService",
+]

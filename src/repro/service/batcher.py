@@ -1,0 +1,121 @@
+"""Request queue + micro-batcher: pack same-bucket requests into one dispatch.
+
+Requests accumulate in an arrival-ordered queue; a batch is formed by
+taking the oldest pending request's shape bucket and draining up to
+``max_batch`` same-bucket requests (FIFO within the bucket, so no request
+starves behind an endless stream of other buckets).  The batch is then
+packed block-diagonally (``repro.graphs.pack``) so one device dispatch
+serves all members.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from ..graphs.pack import PackedProblem, pack_problems
+from .cache import Bucket
+
+__all__ = ["Request", "RequestStats", "MicroBatcher"]
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request observability (exposed on the future)."""
+
+    queue_time_s: float = 0.0  # submit -> batch formation
+    pack_time_s: float = 0.0  # host-side block-diagonal packing (shared)
+    device_time_s: float = 0.0  # device fixed-point time (shared)
+    compile_hit: bool = False  # did the batch reuse a cached executable
+    bucket: Optional[Bucket] = None
+    batch_size: int = 0  # real members in the packed batch
+    rounds: int = 0  # fixed-point levels the batch ran
+    iterations: int = 0  # total prune iterations across levels
+
+
+@dataclasses.dataclass
+class Request:
+    graph: CSRGraph
+    workload: str  # "ktruss" | "kmax" | "decompose"
+    k: int  # target k (ktruss) or starting k (kmax/decompose)
+    bucket: Bucket
+    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    stats: RequestStats = dataclasses.field(default_factory=RequestStats)
+
+
+class MicroBatcher:
+    """Arrival-ordered queue with same-bucket batch formation."""
+
+    def __init__(self, *, max_batch: int = 8, chunk: int = 256):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self.chunk = int(chunk)
+        self._pending: deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def enqueue(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def next_batch(self) -> list[Request]:
+        """Drain up to ``max_batch`` requests sharing the oldest bucket."""
+        if not self._pending:
+            return []
+        bucket = self._pending[0].bucket
+        batch: list[Request] = []
+        keep: deque[Request] = deque()
+        while self._pending:
+            req = self._pending.popleft()
+            if req.bucket == bucket and len(batch) < self.max_batch:
+                batch.append(req)
+            else:
+                keep.append(req)
+        self._pending = keep
+        now = time.perf_counter()
+        for req in batch:
+            req.stats.queue_time_s = now - req.submitted_at
+            req.stats.bucket = bucket
+            req.stats.batch_size = len(batch)
+        return batch
+
+    def pack(self, batch: list[Request]) -> PackedProblem:
+        """Block-diagonal pack, always padded to ``max_batch`` slots so the
+        packed shapes — and hence the compiled executable — do not depend on
+        how full the batch is."""
+        t0 = time.perf_counter()
+        bucket = batch[0].bucket
+        packed = pack_problems(
+            [r.graph for r in batch],
+            slot_n=bucket.n_pad,
+            slot_nnz=bucket.nnz_pad,
+            slots=self.max_batch,
+            chunk=self.chunk,
+        )
+        dt = time.perf_counter() - t0
+        for req in batch:
+            req.stats.pack_time_s = dt
+        return packed
+
+    def edge_slices(self, packed: PackedProblem) -> list[slice]:
+        return [slice(a, b) for a, b in packed.edge_ranges]
+
+    @staticmethod
+    def member_thresh(
+        packed: PackedProblem, values: list[int], total: int
+    ) -> np.ndarray:
+        """Per-edge threshold vector: member i's edge range gets values[i]."""
+        thresh = np.zeros(total, dtype=np.int32)
+        for (a, b), v in zip(packed.edge_ranges, values):
+            thresh[a:b] = v
+        return thresh

@@ -1,0 +1,171 @@
+"""Shape-bucket compile cache for the K-truss serving layer.
+
+XLA (and Pallas) executables are specialized to static shapes, so a naive
+server recompiles the fixed-point program for every distinct graph — tens
+of milliseconds to seconds per request.  Canonicalizing every incoming
+graph to power-of-two ``(n_pad, nnz_pad, window)`` buckets collapses the
+shape space: one executable per bucket serves every request (and every
+micro-batch) that lands in it.  GraphBLAST makes the same bet — reusable
+kernels behind a stable API beat per-input specialization.
+
+The compiled artifact is a *problem-polymorphic* fixed point: unlike
+``KTrussEngine`` (which closes over one graph's arrays), the executable
+takes the :class:`FineProblem` pytree as an argument, so any same-bucket
+problem — including a block-diagonal batch of them — reuses the program.
+The prune threshold is a per-edge vector, which lets one dispatch run
+different k values (and mixed ktruss/kmax/decompose workloads) for
+different members of a packed batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.eager_fine import FineProblem, support_fine_eager, support_fine_owner
+from ..graphs.csr import CSRGraph
+
+__all__ = ["Bucket", "bucket_for", "build_fixed_point", "CompileCache"]
+
+
+class Bucket(NamedTuple):
+    """Canonical power-of-two shape class of one graph slot.
+
+    A graph in this bucket is packed to ``n_pad`` vertices, ``nnz_pad``
+    directed nonzeros (twice that undirected) and intersected with windows
+    of width ``window``.  Batches of B same-bucket graphs use the scaled
+    shapes ``(B * n_pad, B * nnz_pad)``; the executable cache key is
+    ``(bucket, slots)``.
+    """
+
+    n_pad: int
+    nnz_pad: int
+    window: int
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def bucket_for(g: CSRGraph, *, chunk: int = 256, min_window: int = 8) -> Bucket:
+    """Canonical shape bucket of one graph.
+
+    The window is sized to the max *undirected* degree so one bucket is
+    valid for every support mode (eager needs out-degree, owner/pallas need
+    the symmetric degree).
+    """
+    deg = g.degrees()
+    indeg = np.bincount(g.colidx, minlength=g.n + 1)
+    und_max = int((deg + indeg).max(initial=0))
+    return Bucket(
+        n_pad=_next_pow2(max(g.n, 1)),
+        nnz_pad=_next_pow2(max(g.nnz, chunk)),
+        window=_next_pow2(max(min_window, und_max)),
+    )
+
+
+def build_fixed_point(
+    *,
+    mode: str = "eager",
+    backend: str = "xla",
+    window: int,
+    chunk: int = 256,
+    max_iters: int = 1_000,
+) -> Callable:
+    """Compile-cachable fixed point ``(problem, alive0, thresh) -> (alive, support, iters)``.
+
+    ``thresh`` is a per-edge int32 vector (``k - 2`` on each member's edge
+    range in a packed batch), traced rather than static so one executable
+    serves every k.  Shapes come from the arguments, so the jit cache holds
+    exactly one entry per shape bucket.
+    """
+    if backend == "pallas":
+        from ..kernels import ops as kernel_ops  # lazy: keeps service dep-light
+
+        support = functools.partial(
+            kernel_ops.support_fine, window=window, chunk=chunk
+        )
+    elif backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
+    elif mode == "owner":
+        support = functools.partial(support_fine_owner, window=window, chunk=chunk)
+    elif mode == "eager":
+        support = functools.partial(support_fine_eager, window=window, chunk=chunk)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    def fixed_point(p: FineProblem, alive0: jax.Array, thresh: jax.Array):
+        def cond(state):
+            _, _, changed, it = state
+            return changed & (it < max_iters)
+
+        def body(state):
+            alive, _, _, it = state
+            s = support(p, alive)
+            new_alive = alive & (s >= thresh)
+            changed = jnp.any(new_alive != alive)
+            return new_alive, s * new_alive.astype(s.dtype), changed, it + 1
+
+        state = (alive0, jnp.zeros_like(alive0, jnp.int32), jnp.asarray(True), 0)
+        alive, s, _, it = jax.lax.while_loop(cond, body, state)
+        return alive, s, it
+
+    return jax.jit(fixed_point)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    compiles: int = 0
+    hits: int = 0
+
+    @property
+    def requests(self) -> int:
+        return self.compiles + self.hits
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compiles": self.compiles,
+            "hits": self.hits,
+            "hit_rate": round(self.hit_rate, 4),
+        }
+
+
+class CompileCache:
+    """Executable store keyed by ``(bucket, slots)`` with hit/miss counters.
+
+    Each key maps to one jitted fixed point built by ``builder(key)``; a
+    key's executable only ever sees one argument-shape signature (the
+    bucket-canonical one), so ``compiles`` counts actual XLA compilations,
+    not just builder calls.
+    """
+
+    def __init__(self, builder: Callable[[tuple[Bucket, int]], Callable]):
+        self._builder = builder
+        self._exes: dict[tuple[Bucket, int], Callable] = {}
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def get(self, bucket: Bucket, slots: int) -> tuple[Callable, bool]:
+        """Return (executable, was_hit) for one bucket/batch-width key."""
+        key = (bucket, int(slots))
+        with self._lock:
+            exe = self._exes.get(key)
+            if exe is not None:
+                self.stats.hits += 1
+                return exe, True
+            self.stats.compiles += 1
+            exe = self._exes[key] = self._builder(key)
+            return exe, False
+
+    def __len__(self) -> int:
+        return len(self._exes)

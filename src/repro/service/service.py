@@ -1,0 +1,288 @@
+"""TrussService: batched, cache-aware K-truss serving front end.
+
+Workloads (per request):
+
+* ``ktruss(k)``    — membership mask + supports of the k-truss.
+* ``kmax()``       — largest non-empty truss, warm-started level by level.
+* ``decompose()``  — full truss decomposition (trussness per edge).
+
+Flow: ``submit_*`` canonicalizes the graph to a shape bucket and enqueues;
+``flush`` drains the queue in same-bucket micro-batches.  Each batch is
+packed block-diagonally, the bucket's cached executable runs the
+fixed point with a *per-edge* threshold vector (so mixed workloads and
+mixed k share one dispatch), and level peeling advances kmax/decompose
+members while ktruss members complete on the first round.  Futures resolve
+on flush (or transparently on ``result()``); per-request stats expose
+queue/pack/device time and whether the batch hit the compile cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.truss import KTrussResult, TrussDecomposition
+from ..graphs.csr import CSRGraph
+from .batcher import MicroBatcher, Request, RequestStats
+from .cache import Bucket, CompileCache, bucket_for, build_fixed_point
+
+__all__ = ["TrussFuture", "TrussService"]
+
+
+class TrussFuture:
+    """Handle to a submitted request; resolves when its batch is flushed."""
+
+    def __init__(self, service: "TrussService", request: Request):
+        self._service = service
+        self.request = request
+        self._result: Any = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> Any:
+        if not self._done:
+            self._service.flush()
+        if not self._done:
+            raise RuntimeError(f"request {self.request.id} did not resolve")
+        return self._result
+
+    @property
+    def stats(self) -> RequestStats:
+        return self.request.stats
+
+    def _resolve(self, result: Any) -> None:
+        self._result = result
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Member:
+    """Per-request state while its batch peels levels."""
+
+    future: TrussFuture
+    sl: slice
+    cur_k: int
+    active: bool = True
+    # kmax / decompose accumulators
+    kmax: int = 0
+    levels: int = 0
+    level_results: list = dataclasses.field(default_factory=list)
+    trussness: np.ndarray | None = None
+    prev_edges: int = 0
+
+    @property
+    def request(self) -> Request:
+        return self.future.request
+
+
+class TrussService:
+    """Batched multi-graph K-truss serving over one compile cache."""
+
+    def __init__(
+        self,
+        *,
+        mode: str = "eager",
+        backend: str = "xla",
+        max_batch: int = 8,
+        chunk: int = 256,
+        max_iters: int = 1_000,
+    ):
+        if chunk & (chunk - 1):
+            raise ValueError(f"chunk={chunk} must be a power of two")
+        self.mode = mode
+        self.backend = backend
+        self.chunk = int(chunk)
+        self.max_iters = int(max_iters)
+        self.batcher = MicroBatcher(max_batch=max_batch, chunk=chunk)
+        self.cache = CompileCache(self._build_executable)
+        self._futures: dict[int, TrussFuture] = {}
+        self.requests_served = 0
+        self.batches_run = 0
+        self.device_time_s = 0.0
+
+    # ------------------------------------------------------------------ #
+    # Submission
+    # ------------------------------------------------------------------ #
+    def submit(self, g: CSRGraph, workload: str = "ktruss", *, k: int = 3) -> TrussFuture:
+        if workload not in ("ktruss", "kmax", "decompose"):
+            raise ValueError(f"unknown workload {workload!r}")
+        if k < 3:
+            raise ValueError("k must be >= 3")
+        bucket = bucket_for(g, chunk=self.chunk)
+        req = Request(graph=g, workload=workload, k=int(k), bucket=bucket)
+        fut = TrussFuture(self, req)
+        self._futures[req.id] = fut
+        self.batcher.enqueue(req)
+        return fut
+
+    def submit_ktruss(self, g: CSRGraph, k: int) -> TrussFuture:
+        return self.submit(g, "ktruss", k=k)
+
+    def submit_kmax(self, g: CSRGraph, k_start: int = 3) -> TrussFuture:
+        return self.submit(g, "kmax", k=k_start)
+
+    def submit_decompose(self, g: CSRGraph, k_start: int = 3) -> TrussFuture:
+        return self.submit(g, "decompose", k=k_start)
+
+    # ------------------------------------------------------------------ #
+    # Batch execution
+    # ------------------------------------------------------------------ #
+    def poll(self) -> int:
+        """Run at most one micro-batch; returns how many requests resolved."""
+        batch = self.batcher.next_batch()
+        if not batch:
+            return 0
+        return self._run_batch(batch)
+
+    def flush(self) -> int:
+        """Drain the queue; returns how many requests resolved."""
+        n = 0
+        while len(self.batcher):
+            n += self.poll()
+        return n
+
+    def _build_executable(self, key: tuple[Bucket, int]):
+        bucket, _slots = key
+        return build_fixed_point(
+            mode=self.mode,
+            backend=self.backend,
+            window=bucket.window,
+            chunk=self.chunk,
+            max_iters=self.max_iters,
+        )
+
+    def _run_batch(self, batch: list[Request]) -> int:
+        bucket = batch[0].bucket
+        packed = self.batcher.pack(batch)
+        exe, hit = self.cache.get(bucket, self.batcher.max_batch)
+        for req in batch:
+            req.stats.compile_hit = hit
+
+        p = packed.problem
+        total = p.nnz_pad
+        members = [
+            _Member(
+                future=self._futures.pop(req.id),
+                sl=slice(a, b),
+                cur_k=req.k,
+                trussness=(
+                    np.full(b - a, max(2, req.k - 1), dtype=np.int32)
+                    if req.workload == "decompose"
+                    else None
+                ),
+                prev_edges=b - a,
+            )
+            for req, (a, b) in zip(batch, packed.edge_ranges)
+        ]
+        # Edgeless graphs resolve without touching the device.
+        for m in members:
+            if m.prev_edges == 0:
+                self._finalize_empty(m)
+
+        alive = jnp.asarray(p.colidx != 0)
+        rounds = 0
+        total_iters = 0
+        while any(m.active for m in members):
+            # Finished members keep their last threshold: their alive mask is
+            # already a fixed point for it, so re-running them is idempotent
+            # and adds no prune iterations.
+            thresh_np = self.batcher.member_thresh(
+                packed, [m.cur_k - 2 for m in members], total
+            )
+            t0 = time.perf_counter()
+            alive, support, it = exe(p, alive, jnp.asarray(thresh_np))
+            alive.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.device_time_s += dt
+            rounds += 1
+            total_iters += int(it)
+            alive_np = np.asarray(alive)
+            support_np = np.asarray(support)
+            for m in members:
+                if m.active:
+                    self._advance(m, alive_np[m.sl], support_np[m.sl], int(it))
+            for m in members:
+                m.request.stats.device_time_s += dt
+
+        for m in members:
+            m.request.stats.rounds = rounds
+            m.request.stats.iterations = total_iters
+        self.batches_run += 1
+        self.requests_served += len(batch)
+        return len(batch)
+
+    def _advance(self, m: _Member, alive: np.ndarray, support: np.ndarray, iters: int) -> None:
+        req = m.request
+        edges = int(alive.sum())
+        res = KTrussResult(
+            k=m.cur_k,
+            alive=alive.copy(),
+            support=support.copy(),
+            iterations=iters,
+            edges_remaining=edges,
+        )
+        if req.workload == "ktruss":
+            m.active = False
+            m.future._resolve(res)
+            return
+        m.levels += 1
+        if edges:
+            m.kmax = m.cur_k
+            if req.workload == "kmax":
+                m.level_results.append(res)
+            else:
+                m.trussness[alive] = m.cur_k
+            m.cur_k += 1
+            return
+        m.active = False
+        if req.workload == "kmax":
+            m.future._resolve((m.kmax, m.level_results))
+        else:
+            m.future._resolve(
+                TrussDecomposition(
+                    trussness=m.trussness,
+                    kmax=int(m.trussness.max(initial=0)) if m.trussness.size else 0,
+                    levels=m.levels,
+                )
+            )
+
+    def _finalize_empty(self, m: _Member) -> None:
+        req = m.request
+        m.active = False
+        if req.workload == "ktruss":
+            empty = np.zeros(0, dtype=bool)
+            m.future._resolve(
+                KTrussResult(
+                    k=req.k,
+                    alive=empty,
+                    support=np.zeros(0, dtype=np.int32),
+                    iterations=0,
+                    edges_remaining=0,
+                )
+            )
+        elif req.workload == "kmax":
+            m.future._resolve((0, []))
+        else:
+            m.future._resolve(
+                TrussDecomposition(
+                    trussness=np.zeros(0, dtype=np.int32), kmax=0, levels=0
+                )
+            )
+
+    # ------------------------------------------------------------------ #
+    # Observability
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        return {
+            "requests_served": self.requests_served,
+            "batches_run": self.batches_run,
+            "pending": len(self.batcher),
+            "device_time_s": round(self.device_time_s, 6),
+            **{f"cache_{k}": v for k, v in self.cache.stats.row().items()},
+        }

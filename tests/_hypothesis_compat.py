@@ -1,0 +1,104 @@
+"""Guarded ``hypothesis`` import with a deterministic example-based fallback.
+
+The property tests prefer the real hypothesis engine (shrinking, example
+databases, coverage-guided generation).  When it is not installed — the
+bare container only ships jax/numpy/pytest — the same test code runs
+against a tiny deterministic re-implementation of the strategy surface the
+suite actually uses (``integers``, ``lists``, ``tuples``, ``data``): each
+``@given`` test executes ``max_examples`` seeded draws, so property tests
+degrade to example-based tests instead of erroring at import time.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+
+``requirements-dev.txt`` lists the real dependency for dev machines/CI.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy is just a seeded-draw function."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data()`` draws."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.example(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements)
+            )
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _DataObject(rng))
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._compat_settings = kwargs
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            max_examples = getattr(fn, "_compat_settings", {}).get(
+                "max_examples", 20
+            )
+
+            # Deliberately NOT functools.wraps: the wrapper must present a
+            # zero-parameter signature so pytest does not mistake the
+            # strategy keywords for fixtures.
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(max_examples):
+                    drawn = {
+                        k: s.example(rng) for k, s in strategy_kwargs.items()
+                    }
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,0 +1,248 @@
+"""Serving subsystem: batched results == per-graph engine, cache counters,
+decompose vs ktruss sweeps, packing, and bucketed-window coverage."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    KTrussEngine,
+    bucket_tasks,
+    prepare_fine,
+    support_fine_bucketed,
+    support_fine_eager,
+    support_fine_stacked,
+    support_numpy,
+)
+from repro.graphs import (
+    barabasi,
+    clustered,
+    erdos,
+    pack_problems,
+    rmat,
+    road,
+    stack_problems,
+)
+from repro.service import TrussService, bucket_for
+
+
+def _stream():
+    """20 small graphs spanning every generator-suite family."""
+    out = []
+    for s in range(4):
+        out += [
+            erdos(100, 6.0, seed=s),
+            barabasi(120, 3, seed=s),
+            clustered(3, 16, 0.6, seed=s),
+            road(10, 0.1, seed=s),
+            rmat(6, 4, seed=s),
+        ]
+    return out
+
+
+# ------------------------------------------------------------------ #
+# (a) Batched service == per-graph engine across the generator suite
+# ------------------------------------------------------------------ #
+def test_service_matches_engine_across_suite():
+    graphs = _stream()
+    svc = TrussService(max_batch=4, chunk=64)
+    futs = []
+    for i, g in enumerate(graphs):
+        if i % 10 == 3:
+            futs.append(("kmax", g, svc.submit_kmax(g)))
+        elif i % 10 == 7:
+            futs.append(("decompose", g, svc.submit_decompose(g)))
+        else:
+            k = 3 + (i % 2)
+            futs.append((f"ktruss{k}", g, svc.submit_ktruss(g, k)))
+    svc.flush()
+
+    for label, g, fut in futs:
+        eng = KTrussEngine(g, chunk=64)
+        if label == "kmax":
+            km, levels = fut.result()
+            ekm, elevels = eng.kmax()
+            assert km == ekm
+            assert len(levels) == len(elevels)
+            for a, b in zip(levels, elevels):
+                assert np.array_equal(a.alive, b.alive)
+                assert np.array_equal(a.support, b.support)
+        elif label == "decompose":
+            dec = fut.result()
+            edec = eng.decompose()
+            assert np.array_equal(dec.trussness, edec.trussness)
+            assert dec.kmax == edec.kmax
+        else:
+            k = int(label[-1])
+            res = fut.result()
+            ref = eng.ktruss(k)
+            assert np.array_equal(res.alive, ref.alive), g.name
+            assert np.array_equal(res.support, ref.support), g.name
+            assert res.edges_remaining == ref.edges_remaining
+
+    # Steady-state traffic: a second wave of the same mix must be served
+    # entirely from the compile cache, pushing the hit rate above 1/2.
+    for g in graphs:
+        svc.submit_ktruss(g, 3)
+    for g in graphs:
+        svc.submit_ktruss(g, 4)
+    svc.flush()
+    st = svc.stats()
+    assert st["pending"] == 0
+    assert st["cache_hit_rate"] > 0.5, st
+
+
+# ------------------------------------------------------------------ #
+# (b) Compile cache compiles exactly once per bucket
+# ------------------------------------------------------------------ #
+def test_cache_compiles_once_per_bucket():
+    g1 = erdos(80, 5.0, seed=0)
+    g2 = road(8, 0.1, seed=1)  # different bucket (tiny window)
+    assert bucket_for(g1, chunk=64) != bucket_for(g2, chunk=64)
+    svc = TrussService(max_batch=1, chunk=64)
+    for _ in range(3):
+        svc.submit_ktruss(g1, 3)
+    svc.submit_ktruss(g2, 3)
+    svc.flush()
+    assert svc.cache.stats.compiles == 2  # one per distinct bucket
+    assert svc.cache.stats.hits == 2  # the two repeats of g1's bucket
+    assert len(svc.cache) == 2
+    # Same buckets again: no new compiles.
+    svc.submit_ktruss(g1, 5)
+    svc.submit_kmax(g2)
+    svc.flush()
+    assert svc.cache.stats.compiles == 2
+    assert svc.cache.stats.hits == 4
+
+
+def test_request_stats_populated():
+    g = erdos(60, 5.0, seed=3)
+    svc = TrussService(max_batch=2, chunk=64)
+    f1 = svc.submit_ktruss(g, 3)
+    f2 = svc.submit_ktruss(g, 3)
+    f1.result()
+    s1, s2 = f1.stats, f2.stats
+    assert s1.batch_size == 2 and s2.batch_size == 2
+    assert s1.bucket == bucket_for(g, chunk=64)
+    assert not s1.compile_hit  # first batch for this bucket compiles
+    assert s1.device_time_s > 0 and s1.queue_time_s >= 0
+    assert s1.rounds >= 1
+
+
+# ------------------------------------------------------------------ #
+# (c) decompose() == repeated ktruss(k) sweeps
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize(
+    "g",
+    [clustered(3, 12, 0.8, seed=0), erdos(70, 7.0, seed=1), barabasi(80, 3, seed=2)],
+    ids=["clustered", "er", "ba"],
+)
+def test_decompose_matches_ktruss_sweeps(g):
+    eng = KTrussEngine(g, chunk=64)
+    dec = eng.decompose()
+    # trussness[e] = 2 + #{k >= 3 : e in the k-truss} by truss nesting.
+    expect = np.full(g.nnz, 2, np.int64)
+    k = 3
+    while True:
+        res = eng.ktruss(k)  # cold start each k: independent of the peel
+        if not res.edges_remaining:
+            break
+        expect += res.alive
+        k += 1
+    assert np.array_equal(dec.trussness, expect)
+    assert dec.kmax == int(expect.max(initial=0))
+
+
+def test_decompose_trussless_graph():
+    g = road(6, 0.0, seed=0)  # pure grid: no triangles at all
+    dec = KTrussEngine(g, chunk=64).decompose()
+    assert np.all(dec.trussness == 2)
+    assert dec.kmax == 2  # the 2-truss is the graph itself
+
+
+# ------------------------------------------------------------------ #
+# Block-diagonal packing + stacked batched entry points
+# ------------------------------------------------------------------ #
+def test_pack_problems_supports_match_members():
+    gs = [erdos(50, 6.0, seed=0), clustered(2, 14, 0.7, seed=1), road(6, 0.2, seed=2)]
+    w = max(
+        8, -(-max(int(g.undirected_csr().max_degree()) for g in gs) // 8) * 8
+    )
+    pp = pack_problems(gs, slot_n=64, slot_nnz=256, slots=4, chunk=64)
+    assert pp.problem.nnz_pad == 4 * 256
+    assert pp.problem.rowptr.shape[0] == 4 * 64 + 1
+    alive = jnp.asarray(pp.problem.colidx != 0)
+    s = np.asarray(support_fine_eager(pp.problem, alive, window=w, chunk=64))
+    for g, (a, b) in zip(gs, pp.edge_ranges):
+        assert np.array_equal(s[a:b], support_numpy(g)), g.name
+    # Edges outside every member's range are padding.
+    ends = max(b for _, b in pp.edge_ranges)
+    assert not np.any(s[ends:])
+
+
+def test_stacked_entry_matches_single():
+    gs = [erdos(60, 6.0, seed=0), erdos(60, 7.0, seed=5)]
+    w = max(8, -(-max(int(g.undirected_csr().max_degree()) for g in gs) // 8) * 8)
+    ps = [prepare_fine(g, chunk=64, nnz_pad=256, unnz_pad=512) for g in gs]
+    sp = stack_problems(ps)
+    alive = jnp.stack([jnp.asarray(p.colidx != 0) for p in ps])
+    for mode in ("eager", "owner"):
+        out = np.asarray(
+            support_fine_stacked(sp, alive, window=w, chunk=64, mode=mode)
+        )
+        for i, g in enumerate(gs):
+            assert np.array_equal(out[i][: g.nnz], support_numpy(g)), mode
+
+
+def test_pack_validates_capacity():
+    g = erdos(50, 6.0, seed=0)
+    with pytest.raises(ValueError):
+        pack_problems([g], slot_n=16, slot_nnz=256, chunk=64)  # n > slot_n
+    with pytest.raises(ValueError):
+        pack_problems([g], slot_n=64, slot_nnz=64, chunk=64)  # nnz > capacity
+
+
+# ------------------------------------------------------------------ #
+# bucket_tasks / support_fine_bucketed direct coverage
+# ------------------------------------------------------------------ #
+def test_bucket_tasks_partition_every_edge():
+    g = barabasi(150, 4, seed=7)
+    buckets = bucket_tasks(g, chunk=64)
+    seen = np.concatenate([ids[ids < g.nnz] for _, ids in buckets])
+    assert len(seen) == g.nnz
+    assert np.array_equal(np.sort(seen), np.arange(g.nnz))
+    deg = g.degrees()
+    rows, pos = g.row_of_edge(), g.pos_in_row()
+    need = np.maximum(deg[rows] - pos - 1, deg[g.colidx])
+    for wb, ids in buckets:
+        assert wb & (wb - 1) == 0 and wb >= 8  # power-of-two windows
+        assert len(ids) % 64 == 0  # chunk-padded
+        real = ids[ids < g.nnz]
+        assert np.all(need[real] <= wb)
+
+
+def test_support_fine_bucketed_matches_eager_on_pruned_mask():
+    g = rmat(7, 4, seed=3)
+    p = prepare_fine(g, chunk=64)
+    rng = np.random.default_rng(0)
+    alive_np = (rng.random(p.nnz_pad) < 0.8) & (np.asarray(p.colidx) != 0)
+    alive = jnp.asarray(alive_np)
+    buckets = [(wb, jnp.asarray(ids)) for wb, ids in bucket_tasks(g, chunk=64)]
+    s_b = np.asarray(support_fine_bucketed(p, alive, buckets, chunk=64))
+    w = max(8, -(-g.max_degree() // 8) * 8)
+    s_e = np.asarray(support_fine_eager(p, alive, window=w, chunk=64))
+    assert np.array_equal(s_b, s_e)
+
+
+# ------------------------------------------------------------------ #
+# prepare_fine explicit padding targets
+# ------------------------------------------------------------------ #
+def test_prepare_fine_explicit_pads():
+    g = erdos(40, 5.0, seed=0)
+    p = prepare_fine(g, chunk=64, nnz_pad=512, unnz_pad=1024)
+    assert p.nnz_pad == 512 and p.ucolidx.shape[0] == 1024
+    with pytest.raises(ValueError):
+        prepare_fine(g, chunk=64, nnz_pad=g.nnz - 1)
+    with pytest.raises(ValueError):
+        prepare_fine(g, chunk=64, nnz_pad=512, unnz_pad=8)

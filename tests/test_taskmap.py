@@ -1,7 +1,7 @@
 """Flat-task index math (shared by K-truss and MoE dispatch)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
