@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke lint
+.PHONY: test bench-smoke bench-peel lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -10,6 +10,12 @@ test:
 # Tiny serving benchmark: 6 small graphs, batch widths 1 and 2.
 bench-smoke:
 	$(PYTHON) -m benchmarks.service_bench --smoke
+
+# On-device peel benchmark -> BENCH_peel.json (decompose graphs/s at batch
+# widths {1, 8}, sharded over 8 simulated host devices vs unsharded).
+bench-peel:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
+		$(PYTHON) -m benchmarks.peel_bench --out BENCH_peel.json
 
 # Byte-compile everything (import/syntax gate; no extra tooling required).
 lint:

@@ -32,8 +32,10 @@ def run_speedup(k_setting: str = "k3", max_coarse_edges: int = 40_000):
         coarse = KTrussEngine(g, granularity="coarse", mode="eager")
         fine = KTrussEngine(g, granularity="fine", mode="eager")
         if k_setting == "kmax":
-            # Time the support on the k_max-pruned graph (paper's K=K_max).
-            km, results = fine.kmax()
+            # Time the support on the k_max-pruned graph (paper's K=K_max);
+            # peel_levels is the per-level-results API (kmax() itself is a
+            # single on-device dispatch with no level masks).
+            km, results = fine.peel_levels()
             alive = results[-1].alive if results else None
         dt_c = time_support(coarse)
         dt_f = time_support(fine)

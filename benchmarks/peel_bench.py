@@ -1,0 +1,112 @@
+"""On-device peel benchmark: decompose graphs/s, sharded vs unsharded.
+
+Measures the PR's tentpole path: a stream of same-family graphs is
+submitted as ``decompose`` requests to :class:`repro.service.TrussService`
+at batch widths {1, 8}; each batch's entire level peel runs as one device
+dispatch.  When more than one JAX device is visible (e.g. under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the widths that
+divide the device count are additionally run with the packed slot blocks
+sharded across a ``slots`` mesh, so the artifact tracks the sharding
+overhead/benefit over time.
+
+Writes ``BENCH_peel.json`` (``--out PATH``) — one row per
+(batch width × sharding) cell with cold/warm graphs/s and dispatch counts
+— and prints the same rows as CSV plus ``bench,...`` summary lines.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+from repro.graphs import CSRGraph, erdos
+from repro.service import TrussService
+
+__all__ = ["run_peel_bench", "report"]
+
+
+def _stream(num_graphs: int) -> list[CSRGraph]:
+    out = []
+    for i in range(num_graphs):
+        g = erdos(300, 7.0, seed=100 + i)
+        out.append(CSRGraph(g.n, g.rowptr, g.colidx, name=f"er-{i}"))
+    return out
+
+
+def _wave(svc: TrussService, stream) -> float:
+    t0 = time.perf_counter()
+    futs = [svc.submit_decompose(g) for g in stream]
+    svc.flush()
+    assert all(f.done() for f in futs)
+    return time.perf_counter() - t0
+
+
+def run_peel_bench(
+    num_graphs: int = 8,
+    batch_sizes: tuple[int, ...] = (1, 8),
+    *,
+    chunk: int = 256,
+) -> list[dict]:
+    """One row per (batch width × sharded?) cell: cold + warm graphs/s."""
+    stream = _stream(num_graphs)
+    n_dev = len(jax.devices())
+    rows = []
+    for b in batch_sizes:
+        variants = [None]
+        if n_dev > 1 and b % n_dev == 0:
+            from repro.distributed import slot_mesh
+
+            variants.append(slot_mesh(n_dev))
+        for mesh in variants:
+            svc = TrussService(max_batch=b, chunk=chunk, mesh=mesh)
+            cold = _wave(svc, stream)
+            warm = _wave(svc, stream)
+            st = svc.stats()
+            rows.append(
+                {
+                    "workload": "decompose",
+                    "batch": b,
+                    "sharded": mesh is not None,
+                    "devices": n_dev if mesh is not None else 1,
+                    "graphs": len(stream),
+                    "cold_graphs_per_s": round(len(stream) / cold, 3),
+                    "warm_graphs_per_s": round(len(stream) / warm, 3),
+                    "device_dispatches": st["device_dispatches"],
+                    "device_s": st["device_time_s"],
+                }
+            )
+    return rows
+
+
+def report(rows: list[dict]) -> None:
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    for r in rows:
+        tag = "sharded" if r["sharded"] else "unsharded"
+        print(f"bench,peel_decompose_b{r['batch']}_{tag},{r['warm_graphs_per_s']}")
+
+
+def main() -> None:
+    out = None
+    args = list(sys.argv[1:])
+    if "--out" in args:
+        out = args[args.index("--out") + 1]
+        del args[args.index("--out") : args.index("--out") + 2]
+    smoke = "--smoke" in args
+    num = int(args[0]) if args and not args[0].startswith("--") else (4 if smoke else 8)
+    rows = run_peel_bench(num, batch_sizes=(1, 2) if smoke else (1, 8),
+                          chunk=64 if smoke else 256)
+    report(rows)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ tables.  Sections:
   kernels   — Pallas kernel structural models + interpret-mode checks
   roofline  — §Roofline terms per (arch × shape) from the dry-run JSONL
   service   — TrussService throughput + compile-cache hit rate (batch sweep)
+  peel      — on-device peel: decompose graphs/s, sharded vs unsharded
 """
 
 from __future__ import annotations
@@ -91,6 +92,12 @@ def main() -> None:
         from . import service_bench
 
         service_bench.report(service_bench.run_service_bench())
+
+    if only in (None, "peel"):
+        _section("peel (one-dispatch decompose: graphs/s)")
+        from . import peel_bench
+
+        peel_bench.report(peel_bench.run_peel_bench())
 
     if only in (None, "roofline"):
         _section("roofline (from dry-run artifacts)")

@@ -51,6 +51,11 @@ class FineProblem(NamedTuple):
     mirror (u*) drives the owner mode.  ``u2d`` maps each undirected nonzero
     to its directed edge id so a single ``alive`` vector (over directed
     edges) masks both views.
+
+    Contract: ``rowptr``/``urowptr`` are read only as row *starts*
+    (``rowptr[v-1]`` begins row v; extents come from ``deg``/``udeg``), so
+    layouts may leave unowned pad lanes between rows — the slot-aligned
+    packing (``repro.graphs.pack``, ``layout="aligned"``) relies on this.
     """
 
     rowptr: jax.Array  # (n+1,) int32
@@ -178,7 +183,11 @@ def support_fine_eager(
 
         # --- row-i suffix window (queries) -------------------------------
         a_idx = t[:, None] + 1 + offs  # global colidx positions
-        row_end = p.rowptr[i][:, None]
+        # Row end as start + degree (not rowptr[i]): rowptr is read only as
+        # row *starts* so slot-aligned packings may interleave pad lanes
+        # between slots without violating any prefix-sum invariant.
+        i_start = p.rowptr[jnp.maximum(i, 1) - 1] * (i > 0)
+        row_end = (i_start + p.deg[i])[:, None]
         a_in = a_idx < row_end
         a_idx_c = jnp.clip(a_idx, 0, nnzp - 1)
         a_vals = jnp.where(a_in, p.colidx[a_idx_c], 0)

@@ -25,14 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.csr import CSRGraph
-from .eager_coarse import support_coarse_eager
 from .eager_fine import (
     FineProblem,
     bucket_tasks,
     prepare_fine,
     support_fine_bucketed,
-    support_fine_eager,
-    support_fine_owner,
 )
 
 __all__ = ["KTrussResult", "TrussDecomposition", "KTrussEngine", "make_support_fn"]
@@ -76,30 +73,23 @@ def make_support_fn(
     chunk: int = 1024,
     row_chunk: int = 32,
 ) -> Callable[[jax.Array], jax.Array]:
-    """Build ``alive -> support`` for one decomposition/dataflow/backend."""
-    if backend == "pallas":
-        from ..kernels import ops as kernel_ops  # lazy: keeps core dep-free
+    """Build ``alive -> support`` for one decomposition/dataflow/backend.
 
-        if granularity != "fine":
-            raise ValueError("pallas backend implements the fine granularity")
-        return functools.partial(
-            kernel_ops.support_fine, p, window=window, chunk=chunk
-        )
-    if backend != "xla":
-        raise ValueError(f"unknown backend {backend!r}")
-    if granularity == "coarse":
-        if mode != "eager":
-            raise ValueError("coarse granularity implements the eager mode")
-        return functools.partial(
-            support_coarse_eager, p, window=window, row_chunk=row_chunk
-        )
-    if granularity != "fine":
-        raise ValueError(f"unknown granularity {granularity!r}")
-    if mode == "eager":
-        return functools.partial(support_fine_eager, p, window=window, chunk=chunk)
-    if mode == "owner":
-        return functools.partial(support_fine_owner, p, window=window, chunk=chunk)
-    raise ValueError(f"unknown mode {mode!r}")
+    The problem-bound view of ``repro.exec.make_problem_support`` — one
+    copy of the granularity/mode/backend dispatch serves both the engine
+    and the exec/serving layers.
+    """
+    from ..exec.peel import make_problem_support  # lazy: avoids import cycle
+
+    fn = make_problem_support(
+        granularity=granularity,
+        mode=mode,
+        backend=backend,
+        window=window,
+        chunk=chunk,
+        row_chunk=row_chunk,
+    )
+    return functools.partial(fn, p)
 
 
 class KTrussEngine:
@@ -160,6 +150,7 @@ class KTrussEngine:
                 row_chunk=self.row_chunk,
             )
         self._fixed_point = jax.jit(self._fixed_point_impl, static_argnums=(1,))
+        self._peel_exec = None
 
     # ------------------------------------------------------------------ #
     def support(self, alive: jax.Array) -> jax.Array:
@@ -200,6 +191,67 @@ class KTrussEngine:
             edges_remaining=int(alive_np.sum()),
         )
 
+    # ------------------------------------------------------------------ #
+    # Device-resident peel: kmax / decompose in ONE dispatch
+    # ------------------------------------------------------------------ #
+    @property
+    def peel_executor(self):
+        """Lazily built 1-slot :class:`repro.exec.PeelExecutor`.
+
+        Reuses this engine's support closure (same granularity / mode /
+        backend / bucketing), so the whole level peel — every threshold,
+        every fixed-point iteration — runs inside one compiled
+        ``lax.while_loop`` with no per-level host round-trips.  Its
+        ``dispatches`` counter is the test hook for that contract.
+        """
+        if self._peel_exec is None:
+            from ..exec import PeelExecutor  # lazy: core stays exec-free
+
+            # max_iters stays None: the engine's own max_iters budgets one
+            # ktruss fixed point per level; the peel's total-trip cap is
+            # its provable bound (see exec.build_peel).
+            self._peel_exec = PeelExecutor(
+                support=lambda _p, alive: self._support(alive),
+            )
+        return self._peel_exec
+
+    def _peel_state(self, k_start: int, single_level: bool = False):
+        return self.peel_executor.peel(
+            self.problem,
+            slot_ids=np.zeros(self.problem.nnz_pad, np.int32),
+            k0=[int(k_start)],
+            single_level=[single_level],
+        )
+
+    def kmax(self, k_start: int = 3) -> int:
+        """Largest k with a non-empty truss (0 if even the ``k_start``-truss
+        is empty) — the whole peel in one device dispatch.
+
+        Per-level masks/supports live on :meth:`peel_levels`.
+        """
+        return int(self._peel_state(k_start).kmax[0])
+
+    def decompose(self, k_start: int = 3) -> TrussDecomposition:
+        """Full truss decomposition in one device dispatch.
+
+        An edge's trussness is the last k whose truss still contains it;
+        edges never reaching the ``k_start``-truss keep trussness
+        ``k_start - 1`` (= 2 by default: membership in the 2-truss is
+        vacuous).
+        """
+        st = self._peel_state(k_start)
+        nnz = self.g.nnz
+        trussness = np.asarray(st.trussness)[:nnz].copy()
+        return TrussDecomposition(
+            trussness=trussness,
+            kmax=int(trussness.max(initial=0)) if nnz else 0,
+            levels=int(st.levels[0]),
+        )
+
+    # ------------------------------------------------------------------ #
+    # Host-side level peel: per-level results (the only API that needs a
+    # dispatch per level; kmax/decompose run on-device above)
+    # ------------------------------------------------------------------ #
     def _peel(self, k_start: int = 3):
         """Yield (k, result) per level, warm-starting each k from the
         (k-1)-truss; ends after the first level whose truss is empty."""
@@ -212,8 +264,9 @@ class KTrussEngine:
             alive = jnp.asarray(np.pad(res.alive, (0, pad)))
             k += 1
 
-    def kmax(self, k_start: int = 3) -> tuple[int, list[KTrussResult]]:
-        """Largest k with non-empty truss, warm-starting each k from k-1."""
+    def peel_levels(self, k_start: int = 3) -> tuple[int, list[KTrussResult]]:
+        """(kmax, per-level results) for callers that need every level's
+        alive mask/supports; costs one dispatch per level."""
         results: list[KTrussResult] = []
         kmax = 0
         for k, res in self._peel(k_start):
@@ -221,23 +274,3 @@ class KTrussEngine:
                 kmax = k
                 results.append(res)
         return kmax, results
-
-    def decompose(self, k_start: int = 3) -> TrussDecomposition:
-        """Full truss decomposition via the same level peel as :meth:`kmax`.
-
-        An edge's trussness is the last k whose truss still contains it;
-        edges never reaching the ``k_start``-truss keep trussness
-        ``k_start - 1`` (= 2 by default: membership in the 2-truss is
-        vacuous).
-        """
-        nnz = self.g.nnz
-        trussness = np.full(nnz, max(2, k_start - 1), dtype=np.int32)
-        levels = 0
-        for k, res in self._peel(k_start):
-            trussness[res.alive] = k
-            levels += 1
-        return TrussDecomposition(
-            trussness=trussness,
-            kmax=int(trussness.max(initial=0)) if nnz else 0,
-            levels=levels,
-        )

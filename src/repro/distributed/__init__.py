@@ -1,6 +1,7 @@
-"""Distributed substrate: sharding rules, elastic meshes."""
+"""Distributed substrate: sharding rules, elastic meshes, k-truss slot meshes."""
 
 from .elastic import derive_mesh, mesh_shape_for, spare_devices
+from .ktruss import SLOT_AXIS, peel_problem_specs, shard_peel_args, slot_mesh
 from .sharding import (
     MeshAxes,
     batch_specs,
@@ -15,6 +16,10 @@ __all__ = [
     "derive_mesh",
     "mesh_shape_for",
     "spare_devices",
+    "SLOT_AXIS",
+    "peel_problem_specs",
+    "shard_peel_args",
+    "slot_mesh",
     "MeshAxes",
     "batch_specs",
     "logits_spec",

@@ -1,0 +1,11 @@
+"""Execution layer: the device-resident peel behind every multi-level workload.
+
+``KTrussEngine`` (single graph) and ``TrussService`` (packed batches) both
+lower their ``kmax``/``decompose``/``ktruss`` workloads onto one
+:class:`PeelExecutor` — a single compiled ``lax.while_loop`` that peels
+all truss levels on device and reads back one final state.
+"""
+
+from .peel import PeelExecutor, PeelState, build_peel, make_problem_support
+
+__all__ = ["PeelExecutor", "PeelState", "build_peel", "make_problem_support"]

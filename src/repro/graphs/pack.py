@@ -42,15 +42,27 @@ class PackedGraph:
 
 @dataclasses.dataclass(frozen=True)
 class PackedProblem:
-    """A :class:`PackedGraph` lowered to device-ready ``FineProblem`` arrays."""
+    """Member graphs lowered to device-ready block-diagonal ``FineProblem`` arrays.
+
+    Two layouts:
+
+    * ``"contig"``  — member edges are concatenated from lane 0 with one
+      pad tail (the classic CSR prefix-sum layout).
+    * ``"aligned"`` — member i's edges occupy lane block
+      ``[i * slot_nnz, (i+1) * slot_nnz)`` with per-slot interior padding,
+      so slot boundaries are also lane-block boundaries — what the sharded
+      executor needs to place whole slots per device
+      (``repro.distributed.ktruss``).
+    """
 
     problem: "FineProblem"  # noqa: F821 - repro.core.eager_fine.FineProblem
-    packed: PackedGraph
     slot_nnz: int
-
-    @property
-    def edge_ranges(self) -> tuple[tuple[int, int], ...]:
-        return self.packed.edge_ranges
+    # Member i's real (unpadded) edges occupy colidx[edge_ranges[i][0]:edge_ranges[i][1]].
+    edge_ranges: tuple[tuple[int, int], ...]
+    slot_n: int
+    slots: int
+    layout: str = "contig"
+    packed: PackedGraph | None = None  # union CSRGraph; contig layout only
 
 
 def pack_graphs(
@@ -102,26 +114,136 @@ def pack_problems(
     slot_nnz: int,
     slots: int | None = None,
     chunk: int = 256,
+    layout: str = "contig",
 ) -> PackedProblem:
     """Pack ``graphs`` into one block-diagonal ``FineProblem``.
 
     The packed arrays are padded to ``slots * slot_nnz`` directed nonzeros
     (and twice that undirected), so every batch drawn from the same
     ``(slot_n, slot_nnz, slots)`` bucket shares one executable.
+    ``layout="aligned"`` additionally aligns each member's edge lanes to
+    its own slot block (see :class:`PackedProblem`).
     """
+    b = int(slots if slots is not None else len(graphs))
+    if (b * slot_nnz) % chunk:
+        raise ValueError(f"slots*slot_nnz={b * slot_nnz} not a multiple of chunk={chunk}")
+    if layout == "aligned":
+        return _pack_problems_aligned(
+            graphs, slot_n=slot_n, slot_nnz=slot_nnz, slots=b, chunk=chunk
+        )
+    if layout != "contig":
+        raise ValueError(f"unknown layout {layout!r}")
     from ..core.eager_fine import prepare_fine  # lazy: graphs stays core-free
 
-    b = int(slots if slots is not None else len(graphs))
     total = sum(g.nnz for g in graphs)
     if total > b * slot_nnz:
         raise ValueError(f"batch nnz={total} > {b} * slot_nnz={slot_nnz}")
-    if (b * slot_nnz) % chunk:
-        raise ValueError(f"slots*slot_nnz={b * slot_nnz} not a multiple of chunk={chunk}")
     pg = pack_graphs(graphs, slot_n=slot_n, slots=b)
     problem = prepare_fine(
         pg.graph, chunk=chunk, nnz_pad=b * slot_nnz, unnz_pad=2 * b * slot_nnz
     )
-    return PackedProblem(problem=problem, packed=pg, slot_nnz=int(slot_nnz))
+    return PackedProblem(
+        problem=problem,
+        slot_nnz=int(slot_nnz),
+        edge_ranges=pg.edge_ranges,
+        slot_n=int(slot_n),
+        slots=b,
+        layout="contig",
+        packed=pg,
+    )
+
+
+def _pack_problems_aligned(
+    graphs, *, slot_n: int, slot_nnz: int, slots: int, chunk: int
+) -> PackedProblem:
+    """Slot-aligned block-diagonal packing.
+
+    Each member is prepared on its own ``(slot_n, slot_nnz)`` grid and the
+    per-member arrays are concatenated with slot offsets, so member i's
+    directed lanes are exactly ``[i * slot_nnz, (i+1) * slot_nnz)`` (and
+    undirected lanes twice that).  Pad lanes sit *inside* each slot block;
+    ``rowptr``/``urowptr`` store row starts (the only way the kernels read
+    them — see ``FineProblem``), with row extents carried by the degree
+    arrays.
+    """
+    import jax.numpy as jnp
+
+    from ..core.eager_fine import FineProblem, prepare_fine
+
+    if not graphs:
+        raise ValueError("pack_problems needs at least one graph")
+    if len(graphs) > slots:
+        raise ValueError(f"{len(graphs)} graphs > {slots} slots")
+    if any(g.n > slot_n for g in graphs):
+        raise ValueError(f"member graph exceeds slot_n={slot_n}")
+    if any(g.nnz > slot_nnz for g in graphs):
+        raise ValueError(f"member graph exceeds slot_nnz={slot_nnz}")
+    if slot_nnz % chunk:
+        raise ValueError(f"slot_nnz={slot_nnz} not a multiple of chunk={chunk}")
+    if slots * slot_n + 1 >= np.iinfo(np.int32).max:
+        raise ValueError("packed vertex space overflows int32")
+
+    n_tot, nnzp, unnzp = slots * slot_n, slots * slot_nnz, 2 * slots * slot_nnz
+    rowptr = np.zeros(n_tot + 1, np.int32)
+    urowptr = np.zeros(n_tot + 1, np.int32)
+    deg = np.zeros(n_tot + 1, np.int32)
+    udeg = np.zeros(n_tot + 1, np.int32)
+    colidx = np.zeros(nnzp, np.int32)
+    edge_row = np.zeros(nnzp, np.int32)
+    ucolidx = np.zeros(unnzp, np.int32)
+    uedge_row = np.zeros(unnzp, np.int32)
+    u2d = np.full(unnzp, nnzp, np.int32)
+    rowptr[-1], urowptr[-1] = nnzp, unnzp
+    edge_ranges: list[tuple[int, int]] = []
+
+    for i in range(slots):
+        vo, eo, uo = i * slot_n, i * slot_nnz, 2 * i * slot_nnz
+        if i >= len(graphs):
+            rowptr[vo : vo + slot_n] = eo
+            urowptr[vo : vo + slot_n] = uo
+            edge_ranges.append((eo, eo))
+            continue
+        g = graphs[i]
+        p = prepare_fine(g, chunk=chunk, nnz_pad=slot_nnz, unnz_pad=2 * slot_nnz)
+        lrp = np.asarray(p.rowptr)  # (g.n + 1,) local row starts
+        lurp = np.asarray(p.urowptr)
+        # rowptr[j] is the start of row j+1: rows 1..g.n take the member's
+        # prefix sums; the slot's tail rows are empty at the member's end.
+        rowptr[vo : vo + slot_n] = eo + lrp[np.minimum(np.arange(slot_n), g.n)]
+        urowptr[vo : vo + slot_n] = uo + lurp[np.minimum(np.arange(slot_n), g.n)]
+        deg[vo + 1 : vo + g.n + 1] = np.asarray(p.deg)[1:]
+        udeg[vo + 1 : vo + g.n + 1] = np.asarray(p.udeg)[1:]
+        lcol = np.asarray(p.colidx)
+        colidx[eo : eo + slot_nnz] = np.where(lcol != 0, lcol + vo, 0)
+        lrow = np.asarray(p.edge_row)
+        edge_row[eo : eo + slot_nnz] = np.where(lrow != 0, lrow + vo, 0)
+        lucol = np.asarray(p.ucolidx)
+        ucolidx[uo : uo + 2 * slot_nnz] = np.where(lucol != 0, lucol + vo, 0)
+        lurow = np.asarray(p.uedge_row)
+        uedge_row[uo : uo + 2 * slot_nnz] = np.where(lurow != 0, lurow + vo, 0)
+        lu2d = np.asarray(p.u2d)
+        u2d[uo : uo + 2 * slot_nnz] = np.where(lu2d < slot_nnz, lu2d + eo, nnzp)
+        edge_ranges.append((eo, eo + g.nnz))
+
+    problem = FineProblem(
+        rowptr=jnp.asarray(rowptr),
+        colidx=jnp.asarray(colidx),
+        edge_row=jnp.asarray(edge_row),
+        deg=jnp.asarray(deg),
+        urowptr=jnp.asarray(urowptr),
+        ucolidx=jnp.asarray(ucolidx),
+        u2d=jnp.asarray(u2d),
+        uedge_row=jnp.asarray(uedge_row),
+        udeg=jnp.asarray(udeg),
+    )
+    return PackedProblem(
+        problem=problem,
+        slot_nnz=int(slot_nnz),
+        edge_ranges=tuple(edge_ranges),
+        slot_n=int(slot_n),
+        slots=int(slots),
+        layout="aligned",
+    )
 
 
 def stack_problems(problems):

@@ -2,17 +2,20 @@
 
 Layers (bottom-up):
 
+* :mod:`repro.exec` — the device-resident peel every workload lowers onto.
 * :mod:`.cache`   — shape-bucket canonicalization + compile cache (one
-                    XLA/Pallas executable per power-of-two bucket).
+                    peel executor per ``(bucket, slots, layout)`` key).
 * :mod:`.batcher` — request queue + same-bucket micro-batcher over the
-                    block-diagonal packing in :mod:`repro.graphs.pack`.
+                    slot-aligned block-diagonal packing in
+                    :mod:`repro.graphs.pack`.
 * :mod:`.service` — ``TrussService``: submit/poll futures, per-request
                     stats, ``ktruss(k)`` / ``kmax()`` / ``decompose()``
-                    workloads.
+                    workloads in one dispatch per batch; ``mesh=`` shards
+                    packed slots across devices.
 """
 
 from .batcher import MicroBatcher, Request, RequestStats
-from .cache import Bucket, CompileCache, bucket_for, build_fixed_point
+from .cache import Bucket, CompileCache, bucket_for, build_peel
 from .service import TrussFuture, TrussService
 
 __all__ = [
@@ -22,7 +25,7 @@ __all__ = [
     "Bucket",
     "CompileCache",
     "bucket_for",
-    "build_fixed_point",
+    "build_peel",
     "TrussFuture",
     "TrussService",
 ]

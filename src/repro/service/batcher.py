@@ -16,8 +16,6 @@ import time
 from collections import deque
 from typing import Optional
 
-import numpy as np
-
 from ..graphs.csr import CSRGraph
 from ..graphs.pack import PackedProblem, pack_problems
 from .cache import Bucket
@@ -33,12 +31,12 @@ class RequestStats:
 
     queue_time_s: float = 0.0  # submit -> batch formation
     pack_time_s: float = 0.0  # host-side block-diagonal packing (shared)
-    device_time_s: float = 0.0  # device fixed-point time (shared)
+    device_time_s: float = 0.0  # the batch's single peel dispatch (shared)
     compile_hit: bool = False  # did the batch reuse a cached executable
     bucket: Optional[Bucket] = None
     batch_size: int = 0  # real members in the packed batch
-    rounds: int = 0  # fixed-point levels the batch ran
-    iterations: int = 0  # total prune iterations across levels
+    rounds: int = 0  # fixed-point levels THIS member peeled
+    iterations: int = 0  # prune iterations while THIS member was live
 
 
 @dataclasses.dataclass
@@ -68,11 +66,18 @@ class MicroBatcher:
     def enqueue(self, req: Request) -> None:
         self._pending.append(req)
 
-    def next_batch(self) -> list[Request]:
-        """Drain up to ``max_batch`` requests sharing the oldest bucket."""
+    def next_batch(self, bucket: Bucket | None = None) -> list[Request]:
+        """Drain up to ``max_batch`` requests sharing one bucket.
+
+        With no argument the oldest pending request's bucket is taken
+        (FIFO, so no bucket starves); passing ``bucket`` forms a batch for
+        that bucket only, leaving every other bucket queued — the targeted
+        path behind ``TrussFuture.result()``.
+        """
         if not self._pending:
             return []
-        bucket = self._pending[0].bucket
+        if bucket is None:
+            bucket = self._pending[0].bucket
         batch: list[Request] = []
         keep: deque[Request] = deque()
         while self._pending:
@@ -90,9 +95,11 @@ class MicroBatcher:
         return batch
 
     def pack(self, batch: list[Request]) -> PackedProblem:
-        """Block-diagonal pack, always padded to ``max_batch`` slots so the
-        packed shapes — and hence the compiled executable — do not depend on
-        how full the batch is."""
+        """Slot-aligned block-diagonal pack, always padded to ``max_batch``
+        slots so the packed shapes — and hence the compiled executable — do
+        not depend on how full the batch is.  The aligned layout keeps each
+        member's edge lanes inside its own slot block, which is what lets
+        the executor shard whole slots across a mesh."""
         t0 = time.perf_counter()
         bucket = batch[0].bucket
         packed = pack_problems(
@@ -101,21 +108,9 @@ class MicroBatcher:
             slot_nnz=bucket.nnz_pad,
             slots=self.max_batch,
             chunk=self.chunk,
+            layout="aligned",
         )
         dt = time.perf_counter() - t0
         for req in batch:
             req.stats.pack_time_s = dt
         return packed
-
-    def edge_slices(self, packed: PackedProblem) -> list[slice]:
-        return [slice(a, b) for a, b in packed.edge_ranges]
-
-    @staticmethod
-    def member_thresh(
-        packed: PackedProblem, values: list[int], total: int
-    ) -> np.ndarray:
-        """Per-edge threshold vector: member i's edge range gets values[i]."""
-        thresh = np.zeros(total, dtype=np.int32)
-        for (a, b), v in zip(packed.edge_ranges, values):
-            thresh[a:b] = v
-        return thresh

@@ -8,30 +8,31 @@ shape space: one executable per bucket serves every request (and every
 micro-batch) that lands in it.  GraphBLAST makes the same bet — reusable
 kernels behind a stable API beat per-input specialization.
 
-The compiled artifact is a *problem-polymorphic* fixed point: unlike
-``KTrussEngine`` (which closes over one graph's arrays), the executable
+The compiled artifact is a *problem-polymorphic* on-device peel: unlike
+``KTrussEngine`` (which closes over one graph's arrays), the executor
 takes the :class:`FineProblem` pytree as an argument, so any same-bucket
 problem — including a block-diagonal batch of them — reuses the program.
-The prune threshold is a per-edge vector, which lets one dispatch run
-different k values (and mixed ktruss/kmax/decompose workloads) for
-different members of a packed batch.
+Thresholds are per-slot state advanced inside the compiled loop, which
+lets one dispatch run different k values *and* mixed
+ktruss/kmax/decompose workloads to completion for every member of a
+packed batch (``repro.exec.peel``).  Cache keys are
+``(bucket, slots, layout)``: the slot count scales the packed shapes and
+the layout captures packing alignment + mesh placement, each of which
+specializes the executable.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import threading
-from typing import Callable, NamedTuple
+from typing import Callable, Hashable, NamedTuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core.eager_fine import FineProblem, support_fine_eager, support_fine_owner
+from ..exec.peel import PeelExecutor
 from ..graphs.csr import CSRGraph
 
-__all__ = ["Bucket", "bucket_for", "build_fixed_point", "CompileCache"]
+__all__ = ["Bucket", "bucket_for", "build_peel", "CompileCache"]
 
 
 class Bucket(NamedTuple):
@@ -40,8 +41,8 @@ class Bucket(NamedTuple):
     A graph in this bucket is packed to ``n_pad`` vertices, ``nnz_pad``
     directed nonzeros (twice that undirected) and intersected with windows
     of width ``window``.  Batches of B same-bucket graphs use the scaled
-    shapes ``(B * n_pad, B * nnz_pad)``; the executable cache key is
-    ``(bucket, slots)``.
+    shapes ``(B * n_pad, B * nnz_pad)``; the executor cache key is
+    ``(bucket, slots, layout)``.
     """
 
     n_pad: int
@@ -70,53 +71,34 @@ def bucket_for(g: CSRGraph, *, chunk: int = 256, min_window: int = 8) -> Bucket:
     )
 
 
-def build_fixed_point(
+def build_peel(
     *,
     mode: str = "eager",
     backend: str = "xla",
     window: int,
     chunk: int = 256,
-    max_iters: int = 1_000,
-) -> Callable:
-    """Compile-cachable fixed point ``(problem, alive0, thresh) -> (alive, support, iters)``.
+    max_iters: int | None = None,
+    mesh=None,
+) -> PeelExecutor:
+    """Compile-cachable on-device peel for one shape bucket.
 
-    ``thresh`` is a per-edge int32 vector (``k - 2`` on each member's edge
-    range in a packed batch), traced rather than static so one executable
-    serves every k.  Shapes come from the arguments, so the jit cache holds
-    exactly one entry per shape bucket.
+    The bucket-config adapter over the exec layer: builds the support
+    function from ``(mode, backend, window, chunk)`` and returns a
+    :class:`repro.exec.PeelExecutor` (``repro.exec.build_peel`` is the
+    lower-level hook taking an explicit support callable).  The executor's
+    jitted peel takes the problem pytree (plus per-slot k/workload
+    vectors) as arguments, so it serves every same-bucket batch; shapes
+    come from the arguments, so the jit cache holds exactly one entry per
+    ``(bucket, slots, layout)`` key.
     """
-    if backend == "pallas":
-        from ..kernels import ops as kernel_ops  # lazy: keeps service dep-light
-
-        support = functools.partial(
-            kernel_ops.support_fine, window=window, chunk=chunk
-        )
-    elif backend != "xla":
-        raise ValueError(f"unknown backend {backend!r}")
-    elif mode == "owner":
-        support = functools.partial(support_fine_owner, window=window, chunk=chunk)
-    elif mode == "eager":
-        support = functools.partial(support_fine_eager, window=window, chunk=chunk)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-
-    def fixed_point(p: FineProblem, alive0: jax.Array, thresh: jax.Array):
-        def cond(state):
-            _, _, changed, it = state
-            return changed & (it < max_iters)
-
-        def body(state):
-            alive, _, _, it = state
-            s = support(p, alive)
-            new_alive = alive & (s >= thresh)
-            changed = jnp.any(new_alive != alive)
-            return new_alive, s * new_alive.astype(s.dtype), changed, it + 1
-
-        state = (alive0, jnp.zeros_like(alive0, jnp.int32), jnp.asarray(True), 0)
-        alive, s, _, it = jax.lax.while_loop(cond, body, state)
-        return alive, s, it
-
-    return jax.jit(fixed_point)
+    return PeelExecutor(
+        mode=mode,
+        backend=backend,
+        window=window,
+        chunk=chunk,
+        max_iters=max_iters,
+        mesh=mesh,
+    )
 
 
 @dataclasses.dataclass
@@ -141,23 +123,27 @@ class CacheStats:
 
 
 class CompileCache:
-    """Executable store keyed by ``(bucket, slots)`` with hit/miss counters.
+    """Executor store keyed by ``(bucket, slots, layout)`` with hit/miss
+    counters.
 
-    Each key maps to one jitted fixed point built by ``builder(key)``; a
-    key's executable only ever sees one argument-shape signature (the
+    Each key maps to one peel executor built by ``builder(key)``; a key's
+    executable only ever sees one argument-shape signature (the
     bucket-canonical one), so ``compiles`` counts actual XLA compilations,
-    not just builder calls.
+    not just builder calls.  ``layout`` folds in whatever else specializes
+    the program — packing alignment and mesh placement.
     """
 
-    def __init__(self, builder: Callable[[tuple[Bucket, int]], Callable]):
+    def __init__(self, builder: Callable[[tuple[Bucket, int, Hashable]], Callable]):
         self._builder = builder
-        self._exes: dict[tuple[Bucket, int], Callable] = {}
+        self._exes: dict[tuple[Bucket, int, Hashable], Callable] = {}
         self._lock = threading.Lock()
         self.stats = CacheStats()
 
-    def get(self, bucket: Bucket, slots: int) -> tuple[Callable, bool]:
-        """Return (executable, was_hit) for one bucket/batch-width key."""
-        key = (bucket, int(slots))
+    def get(
+        self, bucket: Bucket, slots: int, layout: Hashable = "contig"
+    ) -> tuple[Callable, bool]:
+        """Return (executor, was_hit) for one bucket/slots/layout key."""
+        key = (bucket, int(slots), layout)
         with self._lock:
             exe = self._exes.get(key)
             if exe is not None:

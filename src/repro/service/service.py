@@ -3,43 +3,47 @@
 Workloads (per request):
 
 * ``ktruss(k)``    — membership mask + supports of the k-truss.
-* ``kmax()``       — largest non-empty truss, warm-started level by level.
+* ``kmax()``       — largest non-empty truss (int).
 * ``decompose()``  — full truss decomposition (trussness per edge).
 
 Flow: ``submit_*`` canonicalizes the graph to a shape bucket and enqueues;
 ``flush`` drains the queue in same-bucket micro-batches.  Each batch is
-packed block-diagonally, the bucket's cached executable runs the
-fixed point with a *per-edge* threshold vector (so mixed workloads and
-mixed k share one dispatch), and level peeling advances kmax/decompose
-members while ktruss members complete on the first round.  Futures resolve
-on flush (or transparently on ``result()``); per-request stats expose
-queue/pack/device time and whether the batch hit the compile cache.
+packed block-diagonally with slot-aligned edge lanes and handed to the
+bucket's cached :class:`repro.exec.PeelExecutor`, which peels **every**
+truss level of **every** member on device in ONE dispatch — per-slot
+thresholds advance inside the compiled loop, ktruss members retire at
+their first fixed point, kmax/decompose members peel to exhaustion — and
+the service reads back one final ``(alive, support, trussness, kmax,
+levels)`` state.  With ``mesh=`` the packed slot blocks are sharded across
+devices (``repro.distributed.ktruss``).  Futures resolve on flush (or
+transparently on ``result()``, which polls only the owning request's
+bucket); per-request stats expose queue/pack/device time, per-member
+levels/iterations, and whether the batch hit the compile cache.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.truss import KTrussResult, TrussDecomposition
 from ..graphs.csr import CSRGraph
 from .batcher import MicroBatcher, Request, RequestStats
-from .cache import Bucket, CompileCache, bucket_for, build_fixed_point
+from .cache import Bucket, CompileCache, bucket_for, build_peel
 
 __all__ = ["TrussFuture", "TrussService"]
 
 
 class TrussFuture:
-    """Handle to a submitted request; resolves when its batch is flushed."""
+    """Handle to a submitted request; resolves when its batch runs."""
 
     def __init__(self, service: "TrussService", request: Request):
         self._service = service
         self.request = request
         self._result: Any = None
+        self._error: BaseException | None = None
         self._done = False
 
     def done(self) -> bool:
@@ -47,9 +51,13 @@ class TrussFuture:
 
     def result(self) -> Any:
         if not self._done:
-            self._service.flush()
+            # Poll only the owning request's bucket — other buckets' queued
+            # work stays queued for their own flush/poll.
+            self._service.resolve(self.request)
         if not self._done:
             raise RuntimeError(f"request {self.request.id} did not resolve")
+        if self._error is not None:
+            raise self._error
         return self._result
 
     @property
@@ -60,25 +68,9 @@ class TrussFuture:
         self._result = result
         self._done = True
 
-
-@dataclasses.dataclass
-class _Member:
-    """Per-request state while its batch peels levels."""
-
-    future: TrussFuture
-    sl: slice
-    cur_k: int
-    active: bool = True
-    # kmax / decompose accumulators
-    kmax: int = 0
-    levels: int = 0
-    level_results: list = dataclasses.field(default_factory=list)
-    trussness: np.ndarray | None = None
-    prev_edges: int = 0
-
-    @property
-    def request(self) -> Request:
-        return self.future.request
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._done = True
 
 
 class TrussService:
@@ -91,19 +83,36 @@ class TrussService:
         backend: str = "xla",
         max_batch: int = 8,
         chunk: int = 256,
-        max_iters: int = 1_000,
+        max_iters: int | None = None,
+        mesh=None,
     ):
         if chunk & (chunk - 1):
             raise ValueError(f"chunk={chunk} must be a power of two")
         self.mode = mode
         self.backend = backend
         self.chunk = int(chunk)
-        self.max_iters = int(max_iters)
+        # None = the peel's provable iteration bound; an explicit cap that
+        # fires raises instead of returning truncated results.
+        self.max_iters = None if max_iters is None else int(max_iters)
+        self.mesh = mesh
+        if mesh is not None:
+            mesh_size = int(np.prod(list(dict(mesh.shape).values())))
+            if max_batch % mesh_size:
+                raise ValueError(
+                    f"max_batch={max_batch} must divide evenly over the "
+                    f"mesh's {mesh_size} devices (slots shard whole)"
+                )
+            mesh_key = (tuple(mesh.axis_names), tuple(dict(mesh.shape).values()))
+        else:
+            mesh_key = None
+        self._layout = ("aligned", mesh_key)
         self.batcher = MicroBatcher(max_batch=max_batch, chunk=chunk)
-        self.cache = CompileCache(self._build_executable)
+        self.cache = CompileCache(self._build_executor)
+        self._slot_ids: dict[int, Any] = {}  # bucket nnz_pad -> device array
         self._futures: dict[int, TrussFuture] = {}
         self.requests_served = 0
         self.batches_run = 0
+        self.device_dispatches = 0
         self.device_time_s = 0.0
 
     # ------------------------------------------------------------------ #
@@ -147,133 +156,108 @@ class TrussService:
             n += self.poll()
         return n
 
-    def _build_executable(self, key: tuple[Bucket, int]):
-        bucket, _slots = key
-        return build_fixed_point(
+    def resolve(self, request: Request) -> None:
+        """Run batches from ``request``'s bucket until it resolves.
+
+        Unlike :meth:`flush` this never touches other buckets' queued
+        requests — a ``result()`` call on one future does not drain the
+        whole service.
+        """
+        while request.id in self._futures:
+            batch = self.batcher.next_batch(bucket=request.bucket)
+            if not batch:
+                raise RuntimeError(
+                    f"request {request.id} is unresolved but not queued"
+                )
+            self._run_batch(batch)
+
+    def _build_executor(self, key: tuple[Bucket, int, Any]):
+        bucket, _slots, _layout = key
+        return build_peel(
             mode=self.mode,
             backend=self.backend,
             window=bucket.window,
             chunk=self.chunk,
             max_iters=self.max_iters,
+            mesh=self.mesh,
         )
 
     def _run_batch(self, batch: list[Request]) -> int:
         bucket = batch[0].bucket
         packed = self.batcher.pack(batch)
-        exe, hit = self.cache.get(bucket, self.batcher.max_batch)
+        exe, hit = self.cache.get(bucket, self.batcher.max_batch, self._layout)
         for req in batch:
             req.stats.compile_hit = hit
 
-        p = packed.problem
-        total = p.nnz_pad
-        members = [
-            _Member(
-                future=self._futures.pop(req.id),
-                sl=slice(a, b),
-                cur_k=req.k,
-                trussness=(
-                    np.full(b - a, max(2, req.k - 1), dtype=np.int32)
-                    if req.workload == "decompose"
-                    else None
-                ),
-                prev_edges=b - a,
-            )
-            for req, (a, b) in zip(batch, packed.edge_ranges)
-        ]
-        # Edgeless graphs resolve without touching the device.
-        for m in members:
-            if m.prev_edges == 0:
-                self._finalize_empty(m)
+        slots = self.batcher.max_batch
+        slot_ids = self._slot_ids.get(bucket.nnz_pad)
+        if slot_ids is None:
+            import jax.numpy as jnp
 
-        alive = jnp.asarray(p.colidx != 0)
-        rounds = 0
-        total_iters = 0
-        while any(m.active for m in members):
-            # Finished members keep their last threshold: their alive mask is
-            # already a fixed point for it, so re-running them is idempotent
-            # and adds no prune iterations.
-            thresh_np = self.batcher.member_thresh(
-                packed, [m.cur_k - 2 for m in members], total
+            slot_ids = self._slot_ids[bucket.nnz_pad] = jnp.asarray(
+                np.repeat(np.arange(slots, dtype=np.int32), bucket.nnz_pad)
             )
-            t0 = time.perf_counter()
-            alive, support, it = exe(p, alive, jnp.asarray(thresh_np))
-            alive.block_until_ready()
-            dt = time.perf_counter() - t0
-            self.device_time_s += dt
-            rounds += 1
-            total_iters += int(it)
-            alive_np = np.asarray(alive)
-            support_np = np.asarray(support)
-            for m in members:
-                if m.active:
-                    self._advance(m, alive_np[m.sl], support_np[m.sl], int(it))
-            for m in members:
-                m.request.stats.device_time_s += dt
+        k0 = np.full(slots, 3, np.int32)
+        single_level = np.zeros(slots, bool)
+        for i, req in enumerate(batch):
+            k0[i] = req.k
+            single_level[i] = req.workload == "ktruss"
 
-        for m in members:
-            m.request.stats.rounds = rounds
-            m.request.stats.iterations = total_iters
+        t0 = time.perf_counter()
+        # peel() synchronizes internally (its iteration-cap check reads back
+        # the done flags), so dt covers the whole dispatch.  The batch was
+        # already dequeued, so if the dispatch fails its futures must carry
+        # the error — otherwise they are stranded unresolvable.
+        try:
+            st = exe.peel(
+                packed.problem, slot_ids=slot_ids, k0=k0, single_level=single_level
+            )
+        except Exception as e:
+            for req in batch:
+                self._futures.pop(req.id)._fail(e)
+            raise
+        dt = time.perf_counter() - t0
+        self.device_time_s += dt
+        self.device_dispatches += 1
+
+        alive = np.asarray(st.alive)
+        support = np.asarray(st.support)
+        trussness = np.asarray(st.trussness)
+        kmax = np.asarray(st.kmax)
+        levels = np.asarray(st.levels)
+        iters = np.asarray(st.iters)
+
+        for i, (req, (a, b)) in enumerate(zip(batch, packed.edge_ranges)):
+            fut = self._futures.pop(req.id)
+            req.stats.device_time_s = dt  # the batch's single dispatch
+            req.stats.rounds = int(levels[i])
+            req.stats.iterations = int(iters[i])
+            if req.workload == "ktruss":
+                member_alive = alive[a:b].copy()
+                fut._resolve(
+                    KTrussResult(
+                        k=req.k,
+                        alive=member_alive,
+                        support=support[a:b].copy(),
+                        iterations=int(iters[i]),
+                        edges_remaining=int(member_alive.sum()),
+                    )
+                )
+            elif req.workload == "kmax":
+                fut._resolve(int(kmax[i]))
+            else:
+                t = trussness[a:b].copy()
+                fut._resolve(
+                    TrussDecomposition(
+                        trussness=t,
+                        kmax=int(t.max(initial=0)) if t.size else 0,
+                        levels=int(levels[i]),
+                    )
+                )
+
         self.batches_run += 1
         self.requests_served += len(batch)
         return len(batch)
-
-    def _advance(self, m: _Member, alive: np.ndarray, support: np.ndarray, iters: int) -> None:
-        req = m.request
-        edges = int(alive.sum())
-        res = KTrussResult(
-            k=m.cur_k,
-            alive=alive.copy(),
-            support=support.copy(),
-            iterations=iters,
-            edges_remaining=edges,
-        )
-        if req.workload == "ktruss":
-            m.active = False
-            m.future._resolve(res)
-            return
-        m.levels += 1
-        if edges:
-            m.kmax = m.cur_k
-            if req.workload == "kmax":
-                m.level_results.append(res)
-            else:
-                m.trussness[alive] = m.cur_k
-            m.cur_k += 1
-            return
-        m.active = False
-        if req.workload == "kmax":
-            m.future._resolve((m.kmax, m.level_results))
-        else:
-            m.future._resolve(
-                TrussDecomposition(
-                    trussness=m.trussness,
-                    kmax=int(m.trussness.max(initial=0)) if m.trussness.size else 0,
-                    levels=m.levels,
-                )
-            )
-
-    def _finalize_empty(self, m: _Member) -> None:
-        req = m.request
-        m.active = False
-        if req.workload == "ktruss":
-            empty = np.zeros(0, dtype=bool)
-            m.future._resolve(
-                KTrussResult(
-                    k=req.k,
-                    alive=empty,
-                    support=np.zeros(0, dtype=np.int32),
-                    iterations=0,
-                    edges_remaining=0,
-                )
-            )
-        elif req.workload == "kmax":
-            m.future._resolve((0, []))
-        else:
-            m.future._resolve(
-                TrussDecomposition(
-                    trussness=np.zeros(0, dtype=np.int32), kmax=0, levels=0
-                )
-            )
 
     # ------------------------------------------------------------------ #
     # Observability
@@ -282,6 +266,7 @@ class TrussService:
         return {
             "requests_served": self.requests_served,
             "batches_run": self.batches_run,
+            "device_dispatches": self.device_dispatches,
             "pending": len(self.batcher),
             "device_time_s": round(self.device_time_s, 6),
             **{f"cache_{k}": v for k, v in self.cache.stats.row().items()},

@@ -1,0 +1,249 @@
+"""Exec layer: the on-device peel behind every multi-level workload.
+
+Covers the PR-level contracts: one device dispatch per decompose/kmax (no
+per-level host round-trips, asserted via the executor dispatch counter),
+batched trussness bit-identical to the per-graph engine across generator
+families, slot-aligned packing, the Pallas backend through the serving
+path, targeted ``result()`` resolution, and the sharded executor on 8
+simulated host devices matching unsharded results exactly.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import KTrussEngine, support_fine_eager, support_numpy
+from repro.exec import PeelExecutor
+from repro.graphs import barabasi, clustered, erdos, pack_problems, rmat, road
+from repro.service import TrussService, bucket_for
+
+
+def _families():
+    return [
+        erdos(90, 6.0, seed=0),
+        barabasi(110, 3, seed=1),
+        clustered(3, 14, 0.6, seed=2),
+        road(9, 0.1, seed=3),
+        rmat(6, 4, seed=4),
+    ]
+
+
+def _same_bucket(factory, count, *, chunk=64, tries=64):
+    """First ``count`` generated graphs sharing one shape bucket (different
+    seeds can shift the power-of-two window/nnz bucket)."""
+    groups = {}
+    for s in range(tries):
+        g = factory(s)
+        groups.setdefault(bucket_for(g, chunk=chunk), []).append(g)
+        if len(groups[bucket_for(g, chunk=chunk)]) == count:
+            return groups[bucket_for(g, chunk=chunk)]
+    raise AssertionError(f"no bucket reached {count} graphs in {tries} tries")
+
+
+# ------------------------------------------------------------------ #
+# One dispatch per multi-level workload + bit-identical results
+# ------------------------------------------------------------------ #
+def test_engine_decompose_is_one_dispatch():
+    for g in _families():
+        eng = KTrussEngine(g, chunk=64)
+        dec = eng.decompose()
+        assert eng.peel_executor.dispatches == 1, g.name
+        km = eng.kmax()
+        assert eng.peel_executor.dispatches == 2, g.name
+        # decompose kmax floors at 2 (every edge is in the 2-truss);
+        # kmax() reports 0 when even the 3-truss is empty.
+        assert km == (dec.kmax if dec.kmax >= 3 else 0)
+        # levels == peeled thresholds: one per k in [3, kmax] + final empty.
+        assert dec.levels == (max(dec.kmax - 2, 0) + 1 if g.nnz else 0)
+
+
+def test_batched_decompose_one_dispatch_matches_engine():
+    graphs = _same_bucket(lambda s: erdos(80, 6.0, seed=s), 4)
+    svc = TrussService(max_batch=4, chunk=64)
+    futs = [svc.submit_decompose(g) for g in graphs]
+    svc.flush()
+    st = svc.stats()
+    assert st["device_dispatches"] == 1, st  # whole batch, every level: once
+    assert st["batches_run"] == 1
+    for g, fut in zip(graphs, futs):
+        dec = fut.result()
+        edec = KTrussEngine(g, chunk=64).decompose()
+        assert np.array_equal(dec.trussness, edec.trussness), g.name
+        assert dec.kmax == edec.kmax and dec.levels == edec.levels
+
+
+def test_mixed_workload_batch_resolves_in_one_dispatch():
+    graphs = _same_bucket(lambda s: erdos(80, 6.0, seed=s), 4)
+    svc = TrussService(max_batch=4, chunk=64)
+    f_kt = svc.submit_ktruss(graphs[0], 4)
+    f_km = svc.submit_kmax(graphs[1])
+    f_dc = svc.submit_decompose(graphs[2])
+    f_k3 = svc.submit_ktruss(graphs[3], 3)
+    svc.flush()
+    assert svc.stats()["device_dispatches"] == 1
+    eng0 = KTrussEngine(graphs[0], chunk=64)
+    ref = eng0.ktruss(4)
+    res = f_kt.result()
+    assert np.array_equal(res.alive, ref.alive)
+    assert np.array_equal(res.support, ref.support)
+    assert f_km.result() == KTrussEngine(graphs[1], chunk=64).kmax()
+    edec = KTrussEngine(graphs[2], chunk=64).decompose()
+    assert np.array_equal(f_dc.result().trussness, edec.trussness)
+    ref3 = KTrussEngine(graphs[3], chunk=64).ktruss(3)
+    assert np.array_equal(f_k3.result().alive, ref3.alive)
+    # per-member stats: the single-level ktruss member peeled one level,
+    # the decompose member peeled through its kmax.
+    assert f_kt.stats.rounds == 1
+    assert f_dc.stats.rounds == edec.levels
+
+
+def test_peel_levels_consistent_with_executor():
+    g = clustered(3, 12, 0.8, seed=0)
+    eng = KTrussEngine(g, chunk=64)
+    km, levels = eng.peel_levels()
+    assert km == eng.kmax()
+    dec = eng.decompose()
+    # level k's alive mask is exactly the trussness >= k edge set.
+    for res in levels:
+        assert np.array_equal(res.alive, dec.trussness >= res.k), res.k
+
+
+def test_executor_direct_single_level_matches_ktruss():
+    g = erdos(70, 7.0, seed=1)
+    eng = KTrussEngine(g, chunk=64)
+    exe = PeelExecutor(
+        mode="eager", backend="xla", window=eng.window, chunk=64
+    )
+    st = exe.peel(
+        eng.problem,
+        slot_ids=np.zeros(eng.problem.nnz_pad, np.int32),
+        k0=[4],
+        single_level=[True],
+    )
+    ref = eng.ktruss(4)
+    assert np.array_equal(np.asarray(st.alive)[: g.nnz], ref.alive)
+    assert np.array_equal(np.asarray(st.support)[: g.nnz], ref.support)
+    assert int(st.iters[0]) == ref.iterations
+
+
+# ------------------------------------------------------------------ #
+# Slot-aligned packing
+# ------------------------------------------------------------------ #
+def test_aligned_pack_supports_match_members():
+    gs = [erdos(50, 6.0, seed=0), clustered(2, 14, 0.7, seed=1), road(6, 0.2, seed=2)]
+    w = max(8, -(-max(int(g.undirected_csr().max_degree()) for g in gs) // 8) * 8)
+    pp = pack_problems(gs, slot_n=64, slot_nnz=256, slots=4, chunk=64, layout="aligned")
+    assert pp.layout == "aligned"
+    assert pp.problem.nnz_pad == 4 * 256
+    # Member i's real lanes start exactly at its slot block.
+    for i, (g, (a, b)) in enumerate(zip(gs, pp.edge_ranges)):
+        assert a == i * 256 and b == a + g.nnz
+    alive = jnp.asarray(pp.problem.colidx != 0)
+    s = np.asarray(support_fine_eager(pp.problem, alive, window=w, chunk=64))
+    for g, (a, b) in zip(gs, pp.edge_ranges):
+        assert np.array_equal(s[a:b], support_numpy(g)), g.name
+    # The empty 4th slot contributes nothing.
+    assert not np.any(s[3 * 256 :])
+
+
+def test_aligned_pack_validates_capacity():
+    g = erdos(50, 6.0, seed=0)
+    with pytest.raises(ValueError):
+        pack_problems([g], slot_n=16, slot_nnz=256, chunk=64, layout="aligned")
+    with pytest.raises(ValueError):
+        pack_problems([g], slot_n=64, slot_nnz=64, chunk=64, layout="aligned")
+
+
+# ------------------------------------------------------------------ #
+# Targeted result(): resolving one future leaves other buckets queued
+# ------------------------------------------------------------------ #
+def test_result_does_not_drain_other_buckets():
+    g1, g2 = erdos(80, 5.0, seed=0), road(8, 0.1, seed=1)
+    assert bucket_for(g1, chunk=64) != bucket_for(g2, chunk=64)
+    svc = TrussService(max_batch=2, chunk=64)
+    f_other = svc.submit_ktruss(g1, 3)  # older, different bucket
+    f_mine = svc.submit_ktruss(g2, 3)
+    res = f_mine.result()
+    assert f_mine.done() and res.k == 3
+    assert not f_other.done()
+    assert svc.stats()["pending"] == 1  # g1 still queued, untouched
+    f_other.result()
+    assert svc.stats()["pending"] == 0
+
+
+# ------------------------------------------------------------------ #
+# Pallas backend through the serving path (interpret mode on CPU)
+# ------------------------------------------------------------------ #
+def test_pallas_service_matches_xla_service():
+    graphs = [erdos(40, 5.0, seed=0), clustered(2, 10, 0.7, seed=1)]
+    results = {}
+    for backend in ("xla", "pallas"):
+        svc = TrussService(backend=backend, max_batch=2, chunk=64)
+        f_dec = svc.submit_decompose(graphs[0])
+        f_kt = svc.submit_ktruss(graphs[1], 3)
+        svc.flush()
+        st = svc.stats()
+        assert st["device_dispatches"] == st["batches_run"]  # 1 per batch
+        results[backend] = (f_dec.result(), f_kt.result())
+    dec_x, kt_x = results["xla"]
+    dec_p, kt_p = results["pallas"]
+    assert np.array_equal(dec_p.trussness, dec_x.trussness)
+    assert dec_p.kmax == dec_x.kmax and dec_p.levels == dec_x.levels
+    assert np.array_equal(kt_p.alive, kt_x.alive)
+    assert np.array_equal(kt_p.support, kt_x.support)
+
+
+# ------------------------------------------------------------------ #
+# Sharded executor on 8 simulated host devices == unsharded
+# ------------------------------------------------------------------ #
+_SHARDED_SCRIPT = """
+import numpy as np, jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.graphs import erdos
+from repro.distributed import slot_mesh
+from repro.service import TrussService, bucket_for
+
+groups = {}
+for s in range(64):
+    g = erdos(40, 5.0, seed=s)
+    groups.setdefault(bucket_for(g, chunk=64), []).append(g)
+    if len(groups[bucket_for(g, chunk=64)]) == 8:
+        graphs = groups[bucket_for(g, chunk=64)]
+        break
+svc_sharded = TrussService(max_batch=8, chunk=64, mesh=slot_mesh(8))
+svc_plain = TrussService(max_batch=8, chunk=64)
+fs = [svc_sharded.submit_decompose(g) for g in graphs]
+fp = [svc_plain.submit_decompose(g) for g in graphs]
+svc_sharded.flush(); svc_plain.flush()
+assert svc_sharded.stats()["device_dispatches"] == 1
+for g, a, b in zip(graphs, fs, fp):
+    da, db = a.result(), b.result()
+    assert np.array_equal(da.trussness, db.trussness), g.name
+    assert da.kmax == db.kmax and da.levels == db.levels
+print("SHARDED_OK")
+"""
+
+
+def test_sharded_peel_matches_unsharded_subprocess():
+    """8 simulated host devices (fresh process: XLA_FLAGS must precede jax
+    init); sharded batched decompose must equal unsharded bit-for-bit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + env.get("XLA_FLAGS", "")
+    ).strip()
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED_OK" in proc.stdout
