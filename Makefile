@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-peel lint
+.PHONY: test bench-smoke bench-peel bench-stream lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -16,6 +16,11 @@ bench-smoke:
 bench-peel:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
 		$(PYTHON) -m benchmarks.peel_bench --out BENCH_peel.json
+
+# Streaming-update benchmark -> BENCH_stream.json (updates/s + frontier
+# ratio at batch widths {1, 16, 256}; smoke asserts the frontier bound).
+bench-stream:
+	$(PYTHON) -m benchmarks.stream_bench --smoke --out BENCH_stream.json
 
 # Byte-compile everything (import/syntax gate; no extra tooling required).
 lint:

@@ -11,6 +11,7 @@ tables.  Sections:
   roofline  — §Roofline terms per (arch × shape) from the dry-run JSONL
   service   — TrussService throughput + compile-cache hit rate (batch sweep)
   peel      — on-device peel: decompose graphs/s, sharded vs unsharded
+  stream    — incremental truss maintenance: updates/s + frontier ratio
 """
 
 from __future__ import annotations
@@ -98,6 +99,14 @@ def main() -> None:
         from . import peel_bench
 
         peel_bench.report(peel_bench.run_peel_bench())
+
+    if only in (None, "stream"):
+        _section("stream (incremental updates: updates/s + frontier frac)")
+        from . import stream_bench
+
+        stream_bench.report(
+            stream_bench.run_stream_bench(widths=(1, 16), updates_per_width=2)
+        )
 
     if only in (None, "roofline"):
         _section("roofline (from dry-run artifacts)")

@@ -1,0 +1,170 @@
+"""Streaming update benchmark: updates/s and frontier-vs-full ratio.
+
+A :class:`repro.stream.StreamingTrussSession` is opened on an R-MAT graph
+(heavy-tailed, triangle-dense — the regime the paper targets) and fed
+balanced insert/delete batches of widths {1, 16, 256}.  Each update costs
+at most ONE device dispatch over the affected-edge frontier; the benchmark
+reports updates/s, the mean frontier size as a fraction of the full edge
+set, and the initial full-decompose time as the from-scratch baseline.
+
+Batches are balanced (half inserts, half deletes; width-1 batches
+alternate) so the edge count never leaves the session's shape bucket —
+otherwise a bucket jump would recompile mid-run and distort the numbers.
+
+Writes ``BENCH_stream.json`` (``--out PATH``) and prints CSV +
+``bench,...`` summary lines.  ``--smoke`` shrinks the update counts but
+keeps the >= 10k-edge graph, and **asserts** the PR's frontier claim: a
+single-edge update re-peels a frontier measurably smaller than the full
+edge set.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.graphs import CSRGraph, rmat
+from repro.service import TrussService
+from repro.stream import EdgeBatch
+
+__all__ = ["run_stream_bench", "report"]
+
+
+def _bench_graph() -> CSRGraph:
+    # Flatter-than-Graph500 quadrants keep the window (and hence the CPU
+    # support cost) sane while staying R-MAT/power-law; ~16k edges.
+    g = rmat(12, 4, a=0.45, b=0.22, c=0.22, seed=42)
+    return CSRGraph(g.n, g.rowptr, g.colidx, name="rmat12-stream")
+
+
+def _make_batches(
+    rng: np.random.Generator, g: CSRGraph, width: int, count: int
+) -> list[EdgeBatch]:
+    """``count`` balanced batches of ``width`` updates over ``g``'s edges.
+
+    Inserts are sampled fresh (not currently present, not pending), and
+    deletes are sampled from the original edge list minus pending deletes,
+    so applying the batches in order is always conflict-free.
+    """
+    existing = set(map(tuple, (g.edge_list() - 1)))
+    deletable = list(existing)
+    batches = []
+    flip = False
+    for _ in range(count):
+        n_del = width // 2 if width > 1 else (1 if flip else 0)
+        n_ins = width - n_del
+        flip = not flip
+        ins = []
+        while len(ins) < n_ins:
+            a, b = int(rng.integers(0, g.n)), int(rng.integers(0, g.n))
+            key = (min(a, b), max(a, b))
+            if a != b and key not in existing:
+                ins.append(key)
+                existing.add(key)
+        dels = []
+        for i in rng.permutation(len(deletable))[:n_del]:
+            dels.append(deletable[i])
+        for d in dels:
+            deletable.remove(d)
+            existing.discard(d)
+        batches.append(EdgeBatch.of(ins, dels))
+    return batches
+
+
+def run_stream_bench(
+    widths: tuple[int, ...] = (1, 16, 256),
+    updates_per_width: int = 6,
+    *,
+    chunk: int = 256,
+) -> list[dict]:
+    """One row per batch width; session re-opened per width (same graph)."""
+    g = _bench_graph()
+    rows = []
+    svc = TrussService(max_batch=1, chunk=chunk)  # shared: one compile
+    # Warm the bucket's executable once so every row's from-scratch
+    # baseline (and the updates) time warm execution, not the XLA compile.
+    svc.submit_decompose(g).result()
+    for width in widths:
+        rng = np.random.default_rng(7)
+        t0 = time.perf_counter()
+        sess = svc.open_stream(g)
+        full_s = time.perf_counter() - t0
+        batches = _make_batches(rng, sess.graph, width, updates_per_width)
+        fronts, update_s = [], []
+        t_all = time.perf_counter()
+        for b in batches:
+            t1 = time.perf_counter()
+            res = sess.update(b)
+            update_s.append(time.perf_counter() - t1)
+            fronts.append(res.frontier_size)
+        wall = time.perf_counter() - t_all
+        st = sess.stats()
+        rows.append(
+            {
+                "graph": g.name,
+                "edges": g.nnz,
+                "batch_width": width,
+                "updates": len(batches),
+                "updates_per_s": round(len(batches) / wall, 4),
+                "mean_update_s": round(float(np.mean(update_s)), 4),
+                "mean_frontier_edges": round(float(np.mean(fronts)), 1),
+                "mean_frontier_frac": round(float(np.mean(fronts)) / g.nnz, 4),
+                "dispatches": st["update_dispatches"],
+                "full_decompose_s": round(full_s, 3),
+                "speedup_vs_full": round(
+                    full_s / max(float(np.mean(update_s)), 1e-9), 2
+                ),
+            }
+        )
+    return rows
+
+
+def report(rows: list[dict]) -> None:
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    for r in rows:
+        print(
+            f"bench,stream_update_b{r['batch_width']},"
+            f"{r['updates_per_s']},frontier_frac={r['mean_frontier_frac']}"
+        )
+
+
+def main() -> None:
+    out = None
+    args = list(sys.argv[1:])
+    if "--out" in args:
+        out = args[args.index("--out") + 1]
+        del args[args.index("--out") : args.index("--out") + 2]
+    smoke = "--smoke" in args
+    rows = run_stream_bench(
+        widths=(1, 16, 256),
+        updates_per_width=2 if smoke else 6,
+    )
+    report(rows)
+    if smoke:
+        # The PR's frontier-bound claim, pinned: a single-edge update on a
+        # >= 10k-edge R-MAT graph re-peels far fewer edges than exist.
+        r1 = next(r for r in rows if r["batch_width"] == 1)
+        assert r1["edges"] >= 10_000, r1
+        assert r1["mean_frontier_edges"] < 0.5 * r1["edges"], (
+            "single-edge frontier not measurably smaller than the graph: "
+            f"{r1}"
+        )
+        assert r1["dispatches"] <= r1["updates"], r1
+        print(
+            f"# smoke OK: frontier {r1['mean_frontier_edges']:.0f} edges "
+            f"vs {r1['edges']} total ({100 * r1['mean_frontier_frac']:.2f}%)"
+        )
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

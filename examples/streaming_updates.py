@@ -1,0 +1,56 @@
+"""Streaming K-truss demo: maintain a decomposition under live edge updates.
+
+Opens a :class:`repro.stream.StreamingTrussSession` on a planted-community
+graph, then feeds it insert/delete batches.  Each update re-peels only the
+affected-edge frontier (one device dispatch — or zero when the update
+touches no triangles at a relevant level), and the maintained trussness is
+bit-identical to a from-scratch ``decompose()`` of the mutated graph,
+which the demo verifies at every step.
+
+Run:  PYTHONPATH=src python examples/streaming_updates.py
+"""
+
+import numpy as np
+
+from repro.core import KTrussEngine
+from repro.graphs import clustered
+from repro.service import TrussService
+from repro.stream import EdgeBatch
+
+
+def random_batch(rng, g, n_ins, n_del):
+    existing = set(map(tuple, (g.edge_list() - 1)))
+    ins = []
+    while len(ins) < n_ins:
+        a, b = int(rng.integers(0, g.n)), int(rng.integers(0, g.n))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            ins.append((a, b))
+            existing.add((min(a, b), max(a, b)))
+    eids = rng.permutation(g.nnz)[:n_del]
+    return EdgeBatch.of(ins, [tuple(e - 1) for e in g.edge_list()[eids]])
+
+
+def main():
+    rng = np.random.default_rng(0)
+    g = clustered(4, 16, 0.6, seed=3)
+    svc = TrussService(max_batch=2, chunk=64)
+    sess = svc.open_stream(g)  # initial full decompose via the batched path
+    print(f"opened stream: {g.nnz} edges, kmax={sess.kmax}")
+
+    for step in range(8):
+        res = sess.update(random_batch(rng, sess.graph, n_ins=2, n_del=1))
+        ref = KTrussEngine(sess.graph, chunk=64).decompose().trussness
+        assert np.array_equal(res.trussness, ref), "incremental != from-scratch"
+        print(
+            f"step {step}: +{res.num_inserts}/-{res.num_deletes} edges -> "
+            f"frontier {res.frontier_size}/{res.num_edges} "
+            f"({100 * res.frontier_frac:.1f}%), {res.dispatches} dispatch(es), "
+            f"kmax={res.kmax}  [exact ✓]"
+        )
+
+    print("session:", sess.stats())
+    print("service:", svc.stats())
+
+
+if __name__ == "__main__":
+    main()

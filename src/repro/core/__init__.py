@@ -16,6 +16,7 @@ from .reference import (
     ktruss_numpy,
     support_dense,
     support_numpy,
+    trussness_numpy,
 )
 from .taskmap import (
     batched_searchsorted,
@@ -40,6 +41,7 @@ __all__ = [
     "ktruss_numpy",
     "support_dense",
     "support_numpy",
+    "trussness_numpy",
     "batched_searchsorted",
     "row_of_task",
     "segment_offsets",

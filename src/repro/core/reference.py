@@ -23,6 +23,7 @@ __all__ = [
     "ktruss_dense",
     "support_numpy",
     "ktruss_numpy",
+    "trussness_numpy",
     "kmax_numpy",
 ]
 
@@ -101,6 +102,29 @@ def ktruss_numpy(g: CSRGraph, k: int) -> tuple[np.ndarray, np.ndarray]:
         if np.array_equal(new_alive, alive):
             return alive, s * alive
         alive = new_alive
+
+
+def trussness_numpy(g: CSRGraph, k_start: int = 3) -> np.ndarray:
+    """(nnz,) trussness per edge via level-by-level numpy peeling.
+
+    Independent oracle for ``KTrussEngine.decompose()`` and the streaming
+    maintenance invariant: an edge's trussness is the last k whose truss
+    still contains it; edges never reaching the ``k_start``-truss keep the
+    vacuous floor ``k_start - 1``.
+    """
+    trussness = np.full(g.nnz, max(2, k_start - 1), np.int64)
+    alive = np.ones(g.nnz, bool)
+    k = k_start
+    while alive.any():
+        while True:
+            s = support_numpy(g, alive)
+            new_alive = alive & (s >= k - 2)
+            if np.array_equal(new_alive, alive):
+                break
+            alive = new_alive
+        trussness[alive] = k
+        k += 1
+    return trussness
 
 
 def kmax_numpy(g: CSRGraph, k_start: int = 3) -> int:

@@ -68,6 +68,8 @@ def shard_peel_args(
     k0: jax.Array,
     single_level: jax.Array,
     alive0: jax.Array,
+    frozen: jax.Array,
+    frozen_truss: jax.Array,
 ):
     """Place peel inputs on ``mesh``: slot blocks sharded, metadata replicated.
 
@@ -95,4 +97,6 @@ def shard_peel_args(
         put(k0, slot),
         put(single_level, slot),
         put(alive0, edge),
+        put(frozen, edge),
+        put(frozen_truss, edge),
     )

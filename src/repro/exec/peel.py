@@ -109,12 +109,19 @@ def build_peel(
 
     The returned function has signature
 
-        peel(p, slot_ids, k0, single_level, alive0) -> PeelState
+        peel(p, slot_ids, k0, single_level, alive0, frozen, frozen_truss) -> PeelState
 
     where ``slot_ids`` maps every edge lane to its packed slot, ``k0`` is
     each slot's starting k, and ``single_level`` marks slots that stop at
     their first fixed point (the ``ktruss(k)`` workload) instead of peeling
-    on.  ``max_iters`` caps total loop trips across all levels; ``None``
+    on.  ``frozen`` marks lanes whose trussness is already known
+    (``frozen_truss``): they are never pruned or re-ranked, but count as
+    alive for support exactly while the slot's threshold is within their
+    truss (``frozen_truss >= cur_k``) — the masked sub-problem form the
+    streaming layer (``repro.stream``) peels, where only a frontier of
+    affected edges is free and the rest of the graph is frozen at its
+    maintained trussness.  ``alive0`` and ``frozen`` must be disjoint.
+    ``max_iters`` caps total loop trips across all levels; ``None``
     (the default) uses ``nnz_pad + n + 4``, a provable upper bound (every
     trip each active slot either prunes ≥ 1 edge — at most nnz per slot —
     or converges a level — at most kmax + 2 ≤ n + 3 per slot), so an
@@ -138,6 +145,8 @@ def build_peel(
         k0: jax.Array,
         single_level: jax.Array,
         alive0: jax.Array,
+        frozen: jax.Array,
+        frozen_truss: jax.Array,
     ) -> PeelState:
         num_slots = int(k0.shape[0])
         limit = (
@@ -148,8 +157,14 @@ def build_peel(
         state = PeelState(
             alive=alive0,
             support=jnp.zeros_like(alive0, jnp.int32),
-            trussness=jnp.maximum(jnp.int32(2), k0 - 1)[slot_ids]
-            * alive0.astype(jnp.int32),
+            # Frozen lanes carry their known trussness straight through to
+            # the output; free lanes start at the vacuous floor.
+            trussness=jnp.where(
+                frozen,
+                frozen_truss,
+                jnp.maximum(jnp.int32(2), k0 - 1)[slot_ids]
+                * alive0.astype(jnp.int32),
+            ),
             cur_k=k0,
             kmax=jnp.zeros(num_slots, jnp.int32),
             levels=jnp.zeros(num_slots, jnp.int32),
@@ -162,7 +177,12 @@ def build_peel(
             return jnp.any(~st.done) & (st.total_iters < limit)
 
         def body(st: PeelState) -> PeelState:
-            s = support(p, st.alive)
+            # Frozen lanes participate in supports exactly while the slot's
+            # threshold is inside their truss: at level k the from-scratch
+            # k-truss contains a frozen edge iff its trussness >= k, so the
+            # restricted peel over the free lanes sees the same subgraph.
+            eff_alive = st.alive | (frozen & (frozen_truss >= st.cur_k[slot_ids]))
+            s = support(p, eff_alive)
             thresh = (st.cur_k - 2)[slot_ids]
             new_alive = st.alive & (s >= thresh)
             changed = seg((new_alive ^ st.alive).astype(jnp.int32), slot_ids)
@@ -176,10 +196,13 @@ def build_peel(
             retired = converged & (~nonempty | single_level)
             cur_k = jnp.where(converged & ~retired, st.cur_k + 1, st.cur_k)
             # Prune-ahead: slots that just advanced re-prune against their
-            # new threshold using the support already in hand (the mask is
-            # unchanged, so s IS the next level's first support) — saving
-            # one full support evaluation per level, the peel's dominant
-            # cost.  Retired/done slots see their old threshold: idempotent.
+            # new threshold using the support already in hand (the free mask
+            # is unchanged, so s IS the next level's first support; with
+            # frozen lanes s only over-counts — support is monotone in the
+            # alive set — so every ahead-pruned edge would be pruned by the
+            # next level's first true support anyway) — saving one full
+            # support evaluation per level, the peel's dominant cost.
+            # Retired/done slots see their old threshold: idempotent.
             new_alive = new_alive & (s >= (cur_k - 2)[slot_ids])
             return PeelState(
                 alive=new_alive,
@@ -249,8 +272,16 @@ class PeelExecutor:
         k0: Sequence[int] | np.ndarray,
         single_level: Sequence[bool] | np.ndarray | None = None,
         alive0: jax.Array | None = None,
+        frozen: jax.Array | None = None,
+        frozen_truss: jax.Array | None = None,
     ) -> PeelState:
-        """Run the whole peel for one packed problem in one dispatch."""
+        """Run the whole peel for one packed problem in one dispatch.
+
+        ``frozen``/``frozen_truss`` mark lanes whose trussness is already
+        known (see :func:`build_peel`); callers must keep ``alive0`` and
+        ``frozen`` disjoint.  Defaults (all-free) reproduce the plain
+        from-scratch peel bit-for-bit.
+        """
         k0 = jnp.asarray(np.asarray(k0, dtype=np.int32))
         num_slots = int(k0.shape[0])
         if single_level is None:
@@ -259,14 +290,21 @@ class PeelExecutor:
         slot_ids = jnp.asarray(np.asarray(slot_ids, dtype=np.int32))
         if alive0 is None:
             alive0 = p.colidx != 0
+        if frozen is None:
+            frozen = jnp.zeros(alive0.shape, bool)
+        if frozen_truss is None:
+            frozen_truss = jnp.zeros(alive0.shape, jnp.int32)
         if self.mesh is not None:
             from ..distributed.ktruss import shard_peel_args
 
-            p, slot_ids, k0, single_level, alive0 = shard_peel_args(
-                self.mesh, p, slot_ids, k0, single_level, alive0
+            (p, slot_ids, k0, single_level, alive0, frozen, frozen_truss) = (
+                shard_peel_args(
+                    self.mesh, p, slot_ids, k0, single_level, alive0,
+                    frozen, frozen_truss,
+                )
             )
         self.dispatches += 1
-        st = self._peel(p, slot_ids, k0, single_level, alive0)
+        st = self._peel(p, slot_ids, k0, single_level, alive0, frozen, frozen_truss)
         # Belt: the iteration cap is provably unreachable (see build_peel),
         # so an un-done slot means a peel bug — fail loudly rather than
         # letting callers read back a truncated state as final.

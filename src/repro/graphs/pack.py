@@ -107,6 +107,30 @@ def pack_graphs(
     )
 
 
+def _check_member_capacity(graphs, *, slot_n: int, slot_nnz: int) -> None:
+    """Per-member slot-capacity guard, shared by both layouts.
+
+    Names the overflowing member and both capacities: a member larger than
+    its aligned slot would otherwise pad into the next slot's lane region
+    (corrupting slot-id thresholds and shard boundaries) — and in the
+    contiguous layout a single oversized member can hide inside an
+    under-full batch total.  Fail loudly instead.
+    """
+    for i, g in enumerate(graphs):
+        if g.n > slot_n:
+            raise ValueError(
+                f"member {i} ({g.name!r}) has n={g.n} vertices, exceeding "
+                f"its slot's capacity slot_n={slot_n}; use a bucket with "
+                f"n_pad >= {g.n}"
+            )
+        if g.nnz > slot_nnz:
+            raise ValueError(
+                f"member {i} ({g.name!r}) has nnz={g.nnz} edges, exceeding "
+                f"its slot's capacity slot_nnz={slot_nnz}; use a bucket "
+                f"with nnz_pad >= {g.nnz}"
+            )
+
+
 def pack_problems(
     graphs: list[CSRGraph] | tuple[CSRGraph, ...],
     *,
@@ -135,9 +159,13 @@ def pack_problems(
         raise ValueError(f"unknown layout {layout!r}")
     from ..core.eager_fine import prepare_fine  # lazy: graphs stays core-free
 
+    _check_member_capacity(graphs, slot_n=slot_n, slot_nnz=slot_nnz)
     total = sum(g.nnz for g in graphs)
     if total > b * slot_nnz:
-        raise ValueError(f"batch nnz={total} > {b} * slot_nnz={slot_nnz}")
+        raise ValueError(
+            f"batch nnz={total} exceeds the packed capacity "
+            f"{b} slots x slot_nnz={slot_nnz} = {b * slot_nnz}"
+        )
     pg = pack_graphs(graphs, slot_n=slot_n, slots=b)
     problem = prepare_fine(
         pg.graph, chunk=chunk, nnz_pad=b * slot_nnz, unnz_pad=2 * b * slot_nnz
@@ -174,10 +202,7 @@ def _pack_problems_aligned(
         raise ValueError("pack_problems needs at least one graph")
     if len(graphs) > slots:
         raise ValueError(f"{len(graphs)} graphs > {slots} slots")
-    if any(g.n > slot_n for g in graphs):
-        raise ValueError(f"member graph exceeds slot_n={slot_n}")
-    if any(g.nnz > slot_nnz for g in graphs):
-        raise ValueError(f"member graph exceeds slot_nnz={slot_nnz}")
+    _check_member_capacity(graphs, slot_n=slot_n, slot_nnz=slot_nnz)
     if slot_nnz % chunk:
         raise ValueError(f"slot_nnz={slot_nnz} not a multiple of chunk={chunk}")
     if slots * slot_n + 1 >= np.iinfo(np.int32).max:

@@ -15,7 +15,13 @@ Layers (bottom-up):
 """
 
 from .batcher import MicroBatcher, Request, RequestStats
-from .cache import Bucket, CompileCache, bucket_for, build_peel
+from .cache import (
+    Bucket,
+    CompileCache,
+    bucket_for,
+    build_peel,
+    enable_persistent_cache,
+)
 from .service import TrussFuture, TrussService
 
 __all__ = [
@@ -26,6 +32,7 @@ __all__ = [
     "CompileCache",
     "bucket_for",
     "build_peel",
+    "enable_persistent_cache",
     "TrussFuture",
     "TrussService",
 ]

@@ -16,6 +16,8 @@ import time
 from collections import deque
 from typing import Optional
 
+import numpy as np
+
 from ..graphs.csr import CSRGraph
 from ..graphs.pack import PackedProblem, pack_problems
 from .cache import Bucket
@@ -42,9 +44,15 @@ class RequestStats:
 @dataclasses.dataclass
 class Request:
     graph: CSRGraph
-    workload: str  # "ktruss" | "kmax" | "decompose"
-    k: int  # target k (ktruss) or starting k (kmax/decompose)
+    workload: str  # "ktruss" | "kmax" | "decompose" | "stream"
+    k: int  # target k (ktruss) or starting k (kmax/decompose/stream)
     bucket: Bucket
+    # Streaming re-peel members only (workload == "stream"): which of the
+    # member's real edges are free to peel (the affected frontier) and the
+    # known trussness the complement is frozen at.  None on ordinary
+    # requests — the member starts fully alive, nothing frozen.
+    alive0: Optional["np.ndarray"] = None  # (nnz,) bool
+    frozen_truss: Optional["np.ndarray"] = None  # (nnz,) int32
     submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
     id: int = dataclasses.field(default_factory=lambda: next(_ids))
     stats: RequestStats = dataclasses.field(default_factory=RequestStats)

@@ -32,7 +32,34 @@ import numpy as np
 from ..exec.peel import PeelExecutor
 from ..graphs.csr import CSRGraph
 
-__all__ = ["Bucket", "bucket_for", "build_peel", "CompileCache"]
+__all__ = [
+    "Bucket",
+    "bucket_for",
+    "build_peel",
+    "CompileCache",
+    "enable_persistent_cache",
+]
+
+
+def enable_persistent_cache(cache_dir: str) -> None:
+    """Point XLA's persistent compilation cache at ``cache_dir``.
+
+    The in-process :class:`CompileCache` dedupes executables per
+    ``(bucket, slots, layout)`` key but dies with the process; wiring JAX's
+    persistent cache underneath means a restarted server's *first* compile
+    per bucket is a disk hit instead of a cold XLA compile (skipped
+    warmup).  Process-wide by necessity — the JAX cache is global — and
+    idempotent; opt in via ``TrussService(cache_dir=...)``.
+
+    The entry-size/compile-time floors are dropped to 0 so even the small
+    CPU-test executables round-trip (JAX's defaults skip sub-second
+    compiles, which would make a warm restart silently cold).
+    """
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
 
 
 class Bucket(NamedTuple):

@@ -31,7 +31,13 @@ import numpy as np
 from ..core.truss import KTrussResult, TrussDecomposition
 from ..graphs.csr import CSRGraph
 from .batcher import MicroBatcher, Request, RequestStats
-from .cache import Bucket, CompileCache, bucket_for, build_peel
+from .cache import (
+    Bucket,
+    CompileCache,
+    bucket_for,
+    build_peel,
+    enable_persistent_cache,
+)
 
 __all__ = ["TrussFuture", "TrussService"]
 
@@ -85,9 +91,15 @@ class TrussService:
         chunk: int = 256,
         max_iters: int | None = None,
         mesh=None,
+        cache_dir: str | None = None,
     ):
         if chunk & (chunk - 1):
             raise ValueError(f"chunk={chunk} must be a power of two")
+        if cache_dir is not None:
+            # Persist compiled executables across processes (ROADMAP
+            # "compile-cache persistence"): a restarted server warm-starts
+            # its first compile per bucket from disk.
+            enable_persistent_cache(cache_dir)
         self.mode = mode
         self.backend = backend
         self.chunk = int(chunk)
@@ -138,6 +150,55 @@ class TrussService:
 
     def submit_decompose(self, g: CSRGraph, k_start: int = 3) -> TrussFuture:
         return self.submit(g, "decompose", k=k_start)
+
+    def submit_stream(
+        self,
+        g: CSRGraph,
+        *,
+        frontier: np.ndarray,
+        frozen_truss: np.ndarray,
+    ) -> TrussFuture:
+        """Submit a frontier-bounded re-peel (the streaming update kernel).
+
+        ``frontier`` marks the member's edges that are free to peel;
+        the complement is frozen at ``frozen_truss`` (its maintained
+        trussness) and only contributes support while the threshold is
+        inside its truss.  The future resolves to the member's full
+        (nnz,) trussness — frontier lanes re-peeled, frozen lanes passed
+        through.  Rides the same bucket queue / micro-batcher / compile
+        cache as ordinary requests, so concurrent streams (and plain
+        decomposes) coalesce into shared dispatches.
+        """
+        frontier = np.asarray(frontier, bool)
+        frozen_truss = np.asarray(frozen_truss, np.int32)
+        if frontier.shape[0] != g.nnz or frozen_truss.shape[0] != g.nnz:
+            raise ValueError(
+                f"frontier/frozen_truss must cover all {g.nnz} edges"
+            )
+        bucket = bucket_for(g, chunk=self.chunk)
+        req = Request(
+            graph=g,
+            workload="stream",
+            k=3,
+            bucket=bucket,
+            alive0=frontier,
+            frozen_truss=frozen_truss,
+        )
+        fut = TrussFuture(self, req)
+        self._futures[req.id] = fut
+        self.batcher.enqueue(req)
+        return fut
+
+    def open_stream(self, g: CSRGraph, trussness: np.ndarray | None = None):
+        """Open a :class:`repro.stream.StreamingTrussSession` on this service.
+
+        Runs the initial full decompose through the ordinary batched path
+        unless ``trussness`` is supplied; subsequent ``update()`` batches
+        are frontier-bounded re-peels submitted via :meth:`submit_stream`.
+        """
+        from ..stream.session import StreamingTrussSession  # lazy: no cycle
+
+        return StreamingTrussSession(self, g, trussness=trussness)
 
     # ------------------------------------------------------------------ #
     # Batch execution
@@ -203,6 +264,28 @@ class TrussService:
             k0[i] = req.k
             single_level[i] = req.workload == "ktruss"
 
+        # Streaming members peel only their affected frontier; the rest of
+        # their lanes are frozen at the session's maintained trussness.
+        # Ordinary members stay on the executor's defaults (fully alive,
+        # nothing frozen) — zeros here reproduce those defaults exactly.
+        alive0 = frozen = frozen_truss = None
+        if any(req.alive0 is not None for req in batch):
+            import jax.numpy as jnp
+
+            nnzp_total = slots * bucket.nnz_pad
+            alive_np = np.asarray(packed.problem.colidx) != 0
+            frozen_np = np.zeros(nnzp_total, bool)
+            ft_np = np.zeros(nnzp_total, np.int32)
+            for req, (a, b) in zip(batch, packed.edge_ranges):
+                if req.alive0 is None:
+                    continue
+                alive_np[a:b] = req.alive0
+                frozen_np[a:b] = ~req.alive0
+                ft_np[a:b] = req.frozen_truss
+            alive0 = jnp.asarray(alive_np)
+            frozen = jnp.asarray(frozen_np)
+            frozen_truss = jnp.asarray(ft_np)
+
         t0 = time.perf_counter()
         # peel() synchronizes internally (its iteration-cap check reads back
         # the done flags), so dt covers the whole dispatch.  The batch was
@@ -210,7 +293,13 @@ class TrussService:
         # the error — otherwise they are stranded unresolvable.
         try:
             st = exe.peel(
-                packed.problem, slot_ids=slot_ids, k0=k0, single_level=single_level
+                packed.problem,
+                slot_ids=slot_ids,
+                k0=k0,
+                single_level=single_level,
+                alive0=alive0,
+                frozen=frozen,
+                frozen_truss=frozen_truss,
             )
         except Exception as e:
             for req in batch:
@@ -245,6 +334,10 @@ class TrussService:
                 )
             elif req.workload == "kmax":
                 fut._resolve(int(kmax[i]))
+            elif req.workload == "stream":
+                # Full member trussness: frontier lanes re-peeled, frozen
+                # lanes passed through by the peel (see exec.build_peel).
+                fut._resolve(trussness[a:b].copy())
             else:
                 t = trussness[a:b].copy()
                 fut._resolve(

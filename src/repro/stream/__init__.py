@@ -1,0 +1,38 @@
+"""Streaming K-truss: incremental truss maintenance under live edge updates.
+
+Layers (bottom-up):
+
+* :mod:`.delta`    — CSR delta application: an :class:`EdgeBatch` of
+                     inserts/deletes becomes the mutated graph plus edge-id
+                     correspondences (host numpy on sorted edge keys).
+* :mod:`.frontier` — the affected-edge closure: the classic trussness
+                     drift bounds (±1 per unit update) plus per-triangle
+                     level tests bound exactly which edges an update can
+                     re-rank; everything else provably keeps its trussness.
+* :mod:`.session`  — :class:`StreamingTrussSession`: maintains the graph +
+                     decomposition, freezes non-frontier edges at their
+                     known trussness, and lowers each update onto ONE
+                     :class:`repro.exec.PeelExecutor` dispatch via the
+                     owning :class:`repro.service.TrussService` (so many
+                     sessions' updates coalesce like ordinary requests).
+
+Incremental results are bit-identical to from-scratch ``decompose()`` on
+the mutated graph (hypothesis-tested in ``tests/test_stream.py``).
+"""
+
+from .delta import EdgeBatch, GraphDelta, apply_batch, edge_keys
+from .frontier import FrontierResult, compute_frontier, edge_triangles
+from .session import PendingUpdate, StreamingTrussSession, StreamUpdateResult
+
+__all__ = [
+    "EdgeBatch",
+    "GraphDelta",
+    "apply_batch",
+    "edge_keys",
+    "FrontierResult",
+    "compute_frontier",
+    "edge_triangles",
+    "PendingUpdate",
+    "StreamingTrussSession",
+    "StreamUpdateResult",
+]

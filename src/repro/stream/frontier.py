@@ -1,0 +1,246 @@
+"""Affected-edge frontier: which trussness values can an update change?
+
+The fine-grained formulation makes each support contribution a per-triangle
+quantity, and trussness has a per-triangle fixed-point characterization:
+
+    t(f) = max k such that #{triangles {f,e,g} : min(t(e), t(g)) >= k} >= k-2
+
+so ``t(f)`` depends only on the multiset of ``min(t(e), t(g))`` over f's
+triangles.  An update can change ``t(f)`` only by changing that multiset
+*at a level that matters for f* — which yields the classic conservative
+propagation bound used by incremental truss maintenance (Huang et al.,
+"Querying k-truss communities in large and dynamic graphs"):
+
+* drift bounds: one edge insertion raises any trussness by at most 1 and
+  one deletion lowers it by at most 1, so after a batch with ``nI``
+  inserts / ``nD`` deletes every surviving edge satisfies
+  ``lo(e) = max(2, t_old(e) - nD) <= t_new(e) <= t_old(e) + nI = hi(e)``
+  (inserted edges: ``lo = 2``, ``hi = 2 + #triangles``);
+* seed rule: f is affected directly if it gains or loses a triangle whose
+  other two edges satisfy ``min(hi(e), hi(g)) >= lo(f)`` — a triangle
+  whose min-trussness ceiling is below f's trussness floor cannot move
+  f's count at any level f could occupy;
+* propagation rule: an affected edge e spreads to a triangle partner f
+  (through any surviving triangle {f, e, g}) under the same
+  ``min(hi(e), hi(g)) >= lo(f)`` level test, iterated to closure.
+
+Every edge outside the closure provably keeps its trussness, so the
+streaming session may freeze it (``repro.exec.build_peel``'s frozen lanes)
+and re-peel only the frontier — the bit-identical-to-from-scratch
+guarantee the tests pin.
+
+Triangle enumeration reuses the fine-grained suffix-window idiom of
+``support_fine_eager`` (one task per nonzero, row-i suffix intersected
+with row kappa via searchsorted on the sorted composite keys), vectorized
+in numpy and chunked to bound the (chunk x window) working set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from .delta import GraphDelta, edge_keys
+
+__all__ = ["FrontierResult", "edge_triangles", "compute_frontier"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierResult:
+    """The affected-edge closure of one update batch.
+
+    ``frontier`` is a mask over the **new** graph's edge ids; everything
+    outside it keeps its old trussness.  ``lo``/``hi`` are the per-new-edge
+    trussness drift bounds the closure used; ``rounds`` is how many
+    propagation sweeps reached the fixed point; ``num_triangles`` counts
+    the union graph's triangles (the closure's work set).
+    """
+
+    frontier: np.ndarray  # (new_nnz,) bool
+    lo: np.ndarray  # (new_nnz,) int32
+    hi: np.ndarray  # (new_nnz,) int32
+    rounds: int
+    num_triangles: int
+
+    @property
+    def size(self) -> int:
+        return int(self.frontier.sum())
+
+    @property
+    def frac(self) -> float:
+        n = int(self.frontier.shape[0])
+        return self.size / n if n else 0.0
+
+
+def edge_triangles(g: CSRGraph, *, chunk: int = 8192) -> np.ndarray:
+    """All triangles of an upper-triangular CSR as (T, 3) edge-id triples.
+
+    Triangle (i < j < k) is reported as the edge ids of
+    ``[(i,j), (i,k), (j,k)]``.  Same dataflow as the fine-grained support
+    task: edge (i,j)'s row-i suffix supplies the k candidates, and a
+    searchsorted over the global sorted edge keys resolves (j,k) — but in
+    numpy, since the frontier machinery is host-side control logic, not a
+    device kernel.  Chunked so the (chunk, max_degree) window stays small.
+    """
+    nnz = g.nnz
+    if nnz == 0:
+        return np.zeros((0, 3), np.int64)
+    keys = edge_keys(g)
+    rows = g.row_of_edge().astype(np.int64)
+    deg = g.degrees()
+    rowptr = g.rowptr
+    stride = np.int64(g.n + 1)
+    w = int(np.max(deg)) if deg.size else 0
+    if w <= 1:
+        return np.zeros((0, 3), np.int64)
+    offs = np.arange(1, w, dtype=np.int64)[None, :]
+    out: list[np.ndarray] = []
+    for start in range(0, nnz, chunk):
+        t = np.arange(start, min(start + chunk, nnz), dtype=np.int64)[:, None]
+        i = rows[t[:, 0]]
+        j = g.colidx[t[:, 0]].astype(np.int64)
+        # Row-i suffix after position of (i, j): candidate third vertices k.
+        # Row v (1-based) spans [rowptr[v-1], rowptr[v]), so rowptr[i] is
+        # exactly row i's end.
+        q = t + offs  # global candidate edge ids (i, k)
+        in_row = q < rowptr[i][:, None]
+        q_c = np.minimum(q, nnz - 1)
+        k = g.colidx[q_c].astype(np.int64)
+        # Does (j, k) exist?  One searchsorted on the sorted keys.
+        jk = j[:, None] * stride + k
+        pos = np.searchsorted(keys, jk)
+        pos_c = np.minimum(pos, nnz - 1)
+        hit = in_row & (keys[pos_c] == jk)
+        if hit.any():
+            ti, tj = np.nonzero(hit)
+            out.append(
+                np.stack(
+                    [t[ti, 0], q_c[ti, tj], pos_c[ti, tj]], axis=1
+                )
+            )
+    return np.concatenate(out, axis=0) if out else np.zeros((0, 3), np.int64)
+
+
+def _union_graph(delta: GraphDelta) -> tuple[CSRGraph, np.ndarray]:
+    """G_old ∪ inserts, with its sorted edge keys.
+
+    The union holds every triangle of either snapshot: gained triangles
+    (contain an insert, no delete), lost triangles (a delete, no insert)
+    and persistent ones are all subsets of it.
+    """
+    n = delta.old_graph.n
+    ukeys = np.union1d(edge_keys(delta.old_graph), edge_keys(delta.new_graph))
+    u = (ukeys // (n + 1)).astype(np.int64)
+    v = (ukeys % (n + 1)).astype(np.int32)
+    rowptr = np.zeros(n + 1, dtype=np.int64)
+    rowptr[1:] = np.cumsum(np.bincount(u, minlength=n + 1)[1:])
+    return CSRGraph(n, rowptr, v, name=delta.old_graph.name + "+union"), ukeys
+
+
+def compute_frontier(
+    trussness_old: np.ndarray, delta: GraphDelta, *, chunk: int = 8192
+) -> FrontierResult:
+    """Conservative affected-edge closure of ``delta`` (see module doc).
+
+    Args:
+      trussness_old: (old_nnz,) trussness of every old edge (>= 2), e.g.
+        from ``KTrussEngine.decompose()`` or the previous session state.
+      delta: the applied batch (:func:`repro.stream.delta.apply_batch`).
+
+    Returns a :class:`FrontierResult` over the **new** graph's edges.
+    Inserted edges are always in the frontier; an empty batch (or one
+    touching no triangles at a relevant level) yields an empty frontier.
+    """
+    g_old, g_new = delta.old_graph, delta.new_graph
+    trussness_old = np.asarray(trussness_old, np.int64)
+    if trussness_old.shape[0] != g_old.nnz:
+        raise ValueError(
+            f"trussness has {trussness_old.shape[0]} entries, graph has {g_old.nnz}"
+        )
+    union, ukeys = _union_graph(delta)
+    nu = union.nnz
+    old_keys, new_keys = edge_keys(g_old), edge_keys(g_new)
+    nI, nD = delta.num_inserts, delta.num_deletes
+
+    # Union-edge classification + old-trussness lift.
+    is_old = np.isin(ukeys, old_keys, assume_unique=True)
+    is_new = np.isin(ukeys, new_keys, assume_unique=True)
+    is_ins = is_new & ~is_old
+    is_del = is_old & ~is_new
+    t_old_u = np.zeros(nu, np.int64)
+    if g_old.nnz:
+        pos = np.minimum(np.searchsorted(old_keys, ukeys), g_old.nnz - 1)
+        t_old_u[is_old] = trussness_old[pos[is_old]]
+
+    tri = edge_triangles(union, chunk=chunk)
+    num_tri = int(tri.shape[0])
+
+    # Per-union-edge drift bounds (valid for BOTH snapshots' trussness).
+    lo = np.maximum(2, t_old_u - nD)
+    hi = t_old_u + nI
+    lo[is_ins] = 2
+    if num_tri:
+        tri_has_del = is_del[tri].any(axis=1)
+        tri_has_ins = is_ins[tri].any(axis=1)
+        # Inserted edges: trussness <= 2 + (# surviving triangles through them).
+        surv_cnt = np.bincount(
+            tri[~tri_has_del].ravel(), minlength=nu
+        )
+        hi[is_ins] = 2 + surv_cnt[is_ins]
+    else:
+        tri_has_del = tri_has_ins = np.zeros(0, bool)
+        hi[is_ins] = 2
+
+    frontier_u = is_ins.copy()
+    rounds = 0
+    if num_tri:
+        hi_t = hi[tri]  # (T, 3)
+        lo_t = lo[tri]
+        # min over the OTHER two edges' ceilings, per triangle member.
+        min_others = np.stack(
+            [
+                np.minimum(hi_t[:, 1], hi_t[:, 2]),
+                np.minimum(hi_t[:, 0], hi_t[:, 2]),
+                np.minimum(hi_t[:, 0], hi_t[:, 1]),
+            ],
+            axis=1,
+        )
+        relevant = min_others >= lo_t  # the level test, per (triangle, member)
+
+        # Seeds: members of gained/lost triangles that pass the level test.
+        changed_tri = tri_has_ins ^ tri_has_del  # in exactly one snapshot
+        seed_hit = relevant & changed_tri[:, None] & ~is_del[tri]
+        frontier_u[tri[seed_hit]] = True
+
+        # Propagation closure over the NEW graph's triangles only (lost
+        # triangles were fully accounted as seeds; deleted edges never
+        # appear in a surviving triangle, so they cannot spread).
+        surv = ~tri_has_del
+        tri_s, rel_s = tri[surv], relevant[surv]
+        while True:
+            rounds += 1
+            in_f = frontier_u[tri_s]  # (Ts, 3)
+            others_in = np.stack(
+                [
+                    in_f[:, 1] | in_f[:, 2],
+                    in_f[:, 0] | in_f[:, 2],
+                    in_f[:, 0] | in_f[:, 1],
+                ],
+                axis=1,
+            )
+            add = others_in & rel_s & ~in_f
+            if not add.any():
+                break
+            frontier_u[tri_s[add]] = True
+
+    # Project union-edge quantities onto the new graph's edge ids.
+    sel = is_new
+    return FrontierResult(
+        frontier=frontier_u[sel],
+        lo=lo[sel].astype(np.int32),
+        hi=hi[sel].astype(np.int32),
+        rounds=rounds,
+        num_triangles=num_tri,
+    )

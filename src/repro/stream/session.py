@@ -1,0 +1,215 @@
+"""StreamingTrussSession: truss maintenance for one mutating graph.
+
+A session owns one evolving graph and its current truss decomposition.
+Each :meth:`update` applies an :class:`~repro.stream.delta.EdgeBatch`,
+computes the affected-edge frontier (``repro.stream.frontier``), and —
+only if the frontier is non-empty — submits ONE frontier-bounded re-peel
+through the owning :class:`~repro.service.TrussService`: the frontier
+lanes start alive, every other edge is frozen at its maintained trussness
+(``repro.exec.build_peel``'s frozen lanes), so the update costs one device
+dispatch over the sub-problem instead of a full decompose.  Updates whose
+frontier is empty (e.g. deleting an edge in no triangle) cost zero
+dispatches.
+
+The maintained state is exact, not approximate: the frontier closure is a
+proven superset of every edge whose trussness can change, and the frozen
+re-peel restricted to it reproduces from-scratch ``decompose()``
+bit-for-bit (property-tested in ``tests/test_stream.py``).
+
+Sessions ride the service's bucket queue, micro-batcher and compile
+cache, so updates from many concurrent sessions — and ordinary
+ktruss/kmax/decompose requests — coalesce into shared dispatches.  Use
+the two-phase form for that::
+
+    pend_a = session_a.submit_update(batch_a)   # enqueue only
+    pend_b = session_b.submit_update(batch_b)
+    svc.flush()                                 # one packed dispatch
+    res_a, res_b = pend_a.result(), pend_b.result()
+
+``update()`` is submit + result in one call.  Session state (graph +
+trussness) is host numpy: the frozen state rides into the dispatch with
+the packed batch, and the CSR delta/frontier themselves are host-side
+work (moving them onto the device is the ROADMAP async-pipeline item).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from .delta import EdgeBatch, GraphDelta, apply_batch
+from .frontier import FrontierResult, compute_frontier
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..service.service import TrussFuture, TrussService
+
+__all__ = ["StreamUpdateResult", "PendingUpdate", "StreamingTrussSession"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamUpdateResult:
+    """One committed update: the new decomposition + what it cost."""
+
+    trussness: np.ndarray  # (new_nnz,) int32 — full, exact decomposition
+    kmax: int
+    frontier_size: int  # edges re-peeled
+    frontier_frac: float  # frontier_size / new_nnz
+    num_inserts: int
+    num_deletes: int
+    dispatches: int  # 0 (frontier empty) or 1
+    num_edges: int  # new graph's edge count
+
+
+class PendingUpdate:
+    """Deferred half of :meth:`StreamingTrussSession.submit_update`.
+
+    ``result()`` resolves the underlying service future (running the
+    session's bucket if needed), merges the re-peeled frontier with the
+    carried trussness, commits the session state, and returns the
+    :class:`StreamUpdateResult`.
+    """
+
+    def __init__(
+        self,
+        session: "StreamingTrussSession",
+        delta: GraphDelta,
+        frontier: FrontierResult,
+        carry: np.ndarray,
+        future: "TrussFuture | None",
+    ):
+        self._session = session
+        self._delta = delta
+        self._frontier = frontier
+        self._carry = carry
+        self._future = future
+        self._result: StreamUpdateResult | None = None
+
+    def done(self) -> bool:
+        return self._result is not None or (
+            self._future is not None and self._future.done()
+        )
+
+    def result(self) -> StreamUpdateResult:
+        if self._result is None:
+            t_new = self._carry if self._future is None else self._future.result()
+            self._result = self._session._commit(
+                self._delta, self._frontier, np.asarray(t_new, np.int32)
+            )
+        return self._result
+
+
+class StreamingTrussSession:
+    """Incremental truss maintenance for one graph on a ``TrussService``.
+
+    Construct via :meth:`TrussService.open_stream` (shared service —
+    concurrent sessions coalesce) or :meth:`for_graph` (private
+    single-slot service).  ``trussness`` seeds the session; omitted, the
+    initial full decompose runs through the service's batched path.
+    """
+
+    def __init__(
+        self,
+        service: "TrussService",
+        graph: CSRGraph,
+        *,
+        trussness: np.ndarray | None = None,
+    ):
+        self.service = service
+        self.graph = graph
+        if trussness is None:
+            trussness = service.submit_decompose(graph).result().trussness
+        trussness = np.asarray(trussness, np.int32)
+        if trussness.shape[0] != graph.nnz:
+            raise ValueError(
+                f"trussness has {trussness.shape[0]} entries, graph has {graph.nnz}"
+            )
+        self.trussness = trussness
+        self._pending: PendingUpdate | None = None
+        self.updates_applied = 0
+        self.update_dispatches = 0
+        self.edges_repeeled = 0
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def for_graph(cls, graph: CSRGraph, **service_kwargs) -> "StreamingTrussSession":
+        """Standalone session over a private one-slot service."""
+        from ..service.service import TrussService
+
+        service_kwargs.setdefault("max_batch", 1)
+        return cls(TrussService(**service_kwargs), graph)
+
+    @property
+    def kmax(self) -> int:
+        return int(self.trussness.max(initial=0)) if self.graph.nnz else 0
+
+    # ------------------------------------------------------------------ #
+    def submit_update(self, batch: EdgeBatch, *, strict: bool = True) -> PendingUpdate:
+        """Apply ``batch``, enqueue the frontier re-peel, return a handle.
+
+        The graph/trussness state commits when the handle resolves; one
+        update may be in flight per session (deltas are relative to the
+        committed graph), so concurrency comes from many sessions sharing
+        one service, not from pipelining a single session.
+        """
+        if self._pending is not None and self._pending._result is None:
+            raise RuntimeError(
+                "session already has an in-flight update; resolve it first"
+            )
+        delta = apply_batch(self.graph, batch, strict=strict)
+        fr = compute_frontier(self.trussness, delta)
+        g_new = delta.new_graph
+
+        # Trussness carried over from the committed state (inserted edges
+        # start at the vacuous floor 2 and are always in the frontier).
+        carry = np.full(g_new.nnz, 2, np.int32)
+        shared = delta.new2old >= 0
+        carry[shared] = self.trussness[delta.new2old[shared]]
+
+        future = None
+        if fr.size:
+            future = self.service.submit_stream(
+                g_new,
+                frontier=fr.frontier,
+                frozen_truss=np.where(fr.frontier, 0, carry).astype(np.int32),
+            )
+        self._pending = PendingUpdate(self, delta, fr, carry, future)
+        return self._pending
+
+    def update(self, batch: EdgeBatch, *, strict: bool = True) -> StreamUpdateResult:
+        """Submit + resolve in one call (single-session convenience)."""
+        return self.submit_update(batch, strict=strict).result()
+
+    # ------------------------------------------------------------------ #
+    def _commit(
+        self, delta: GraphDelta, fr: FrontierResult, t_new: np.ndarray
+    ) -> StreamUpdateResult:
+        self.graph = delta.new_graph
+        self.trussness = t_new
+        self._pending = None
+        self.updates_applied += 1
+        dispatches = 1 if fr.size else 0
+        self.update_dispatches += dispatches
+        self.edges_repeeled += fr.size
+        return StreamUpdateResult(
+            trussness=t_new,
+            kmax=self.kmax,
+            frontier_size=fr.size,
+            frontier_frac=fr.frac,
+            num_inserts=delta.num_inserts,
+            num_deletes=delta.num_deletes,
+            dispatches=dispatches,
+            num_edges=delta.new_graph.nnz,
+        )
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        return {
+            "updates_applied": self.updates_applied,
+            "update_dispatches": self.update_dispatches,
+            "edges_repeeled": self.edges_repeeled,
+            "edges": self.graph.nnz,
+            "kmax": self.kmax,
+        }

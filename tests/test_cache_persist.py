@@ -1,0 +1,71 @@
+"""Compile-cache persistence: a restarted server warm-starts from disk.
+
+``TrussService(cache_dir=...)`` wires the in-process shape-bucket cache to
+JAX's persistent compilation cache.  The contract: process A populates the
+cache directory; a FRESH process B running the same bucket reports a
+persistent-cache **hit on its first compile** (counted via JAX's own
+``/jax/compilation_cache/cache_hits`` monitoring event — no timing
+heuristics).  Subprocesses are required because the persistent cache is
+keyed per process lifetime and must observe the config before first use.
+"""
+
+import os
+import subprocess
+import sys
+
+_SCRIPT = """
+import sys
+import jax.monitoring
+
+hits = []
+jax.monitoring.register_event_listener(
+    lambda event, **kw: hits.append(event)
+    if event == "/jax/compilation_cache/cache_hits"
+    else None
+)
+
+from repro.graphs import erdos
+from repro.service import TrussService
+
+svc = TrussService(max_batch=1, chunk=64, cache_dir=sys.argv[1])
+fut = svc.submit_decompose(erdos(40, 5.0, seed=0))
+svc.flush()
+assert fut.result().kmax >= 2
+print(f"PERSIST_HITS={len(hits)}")
+print(f"PERSIST_COMPILES={svc.stats()['cache_compiles']}")
+"""
+
+
+def _run(cache_dir: str) -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, cache_dir],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return dict(
+        line.split("=", 1)
+        for line in proc.stdout.splitlines()
+        if line.startswith("PERSIST_")
+    )
+
+
+def test_fresh_process_reports_warm_first_compile(tmp_path):
+    cache_dir = str(tmp_path / "xla-cache")
+    cold = _run(cache_dir)
+    # Process A: compiled once, nothing to hit in an empty cache dir...
+    assert cold["PERSIST_COMPILES"] == "1"
+    assert cold["PERSIST_HITS"] == "0"
+    # ...but its executable persisted to disk.
+    assert os.listdir(cache_dir), "persistent cache wrote no entries"
+
+    warm = _run(cache_dir)
+    # Process B: same in-process compile count (fresh process), but the
+    # XLA compile underneath was served from the persistent cache.
+    assert warm["PERSIST_COMPILES"] == "1"
+    assert int(warm["PERSIST_HITS"]) >= 1, warm

@@ -1,0 +1,265 @@
+"""Streaming K-truss subsystem: incremental == from-scratch, exactly.
+
+The maintenance invariant is absolute — after any batch of edge
+insertions/deletions, the session's trussness must be bit-identical to a
+from-scratch ``decompose()`` of the mutated graph.  Covered here:
+
+* delta application (edge-id maps, strict/lenient conflict handling);
+* frontier soundness (edges outside the closure provably keep their
+  trussness) against the independent numpy oracle;
+* fixed-seed multi-step sessions across generator families, checked
+  against both ``KTrussEngine.decompose()`` and ``trussness_numpy``;
+* the hypothesis property test over random graphs and random batches;
+* coalescing: many sessions' updates + a plain decompose share ONE
+  dispatch, and empty-frontier updates cost zero dispatches;
+* the slot-capacity ``ValueError`` satellite in ``graphs.pack``.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import KTrussEngine, trussness_numpy
+from repro.graphs import clustered, erdos, from_edges, pack_problems, road
+from repro.service import TrussService
+from repro.stream import (
+    EdgeBatch,
+    StreamingTrussSession,
+    apply_batch,
+    compute_frontier,
+    edge_triangles,
+)
+
+
+def _random_batch(rng, g, n_ins, n_del):
+    """A batch of up-to-n_ins fresh inserts + n_del existing deletes."""
+    existing = set(map(tuple, (g.edge_list() - 1)))
+    ins = []
+    for _ in range(8 * n_ins):
+        if len(ins) == n_ins:
+            break
+        a, b = int(rng.integers(0, g.n)), int(rng.integers(0, g.n))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            ins.append((a, b))
+            existing.add((min(a, b), max(a, b)))
+    dels = [
+        tuple(e - 1)
+        for e in g.edge_list()[rng.permutation(g.nnz)[: min(n_del, g.nnz)]]
+    ]
+    return EdgeBatch.of(ins, dels)
+
+
+# ------------------------------------------------------------------ #
+# Delta application
+# ------------------------------------------------------------------ #
+def test_apply_batch_maps_and_strictness():
+    g = erdos(40, 5.0, seed=0)
+    rng = np.random.default_rng(1)
+    batch = _random_batch(rng, g, 3, 2)
+    d = apply_batch(g, batch)
+    assert d.num_inserts == batch.inserts.shape[0]
+    assert d.num_deletes == batch.deletes.shape[0]
+    assert d.new_graph.nnz == g.nnz + d.num_inserts - d.num_deletes
+    # Round trip: surviving old edges land where old2new says.
+    el_old, el_new = g.edge_list(), d.new_graph.edge_list()
+    surv = ~d.deleted_old
+    assert np.array_equal(el_new[d.old2new[surv]], el_old[surv])
+    # new2old inverts old2new on shared edges; inserted rows are -1.
+    shared = d.new2old >= 0
+    assert np.array_equal(d.old2new[d.new2old[shared]], np.nonzero(shared)[0])
+    assert np.array_equal(~shared, d.inserted_new)
+
+    # Strict mode rejects conflicting updates...
+    dup_ins = tuple(el_old[0] - 1)
+    existing = set(map(tuple, el_old - 1))
+    missing = next(
+        (a, b)
+        for a in range(g.n)
+        for b in range(a + 1, g.n)
+        if (a, b) not in existing
+    )
+    with pytest.raises(ValueError, match="already exist"):
+        apply_batch(g, EdgeBatch.of([dup_ins], []))
+    with pytest.raises(ValueError, match="do not exist"):
+        apply_batch(g, EdgeBatch.of([], [missing]))
+    with pytest.raises(ValueError, match="both inserts and deletes"):
+        apply_batch(g, EdgeBatch.of([missing], [missing]))
+    # ...lenient mode drops them and no-ops.
+    d2 = apply_batch(
+        g, EdgeBatch.of([dup_ins, missing], [missing]), strict=False
+    )
+    assert d2.num_inserts == 0 and d2.num_deletes == 0
+    assert d2.new_graph.nnz == g.nnz
+
+
+def test_empty_batch_is_noop():
+    g = clustered(2, 10, 0.7, seed=0)
+    d = apply_batch(g, EdgeBatch.of())
+    assert d.new_graph.nnz == g.nnz
+    fr = compute_frontier(trussness_numpy(g), d)
+    assert fr.size == 0
+
+
+# ------------------------------------------------------------------ #
+# Frontier soundness against the numpy oracle
+# ------------------------------------------------------------------ #
+def test_frontier_excluded_edges_keep_trussness():
+    rng = np.random.default_rng(3)
+    for seed in range(4):
+        g = erdos(40, 6.0, seed=seed)
+        t_old = trussness_numpy(g)
+        d = apply_batch(g, _random_batch(rng, g, 2, 2))
+        fr = compute_frontier(t_old, d)
+        t_new = trussness_numpy(d.new_graph)
+        keep = (d.new2old >= 0) & ~fr.frontier
+        assert np.array_equal(
+            t_new[keep], t_old[d.new2old[keep]]
+        ), f"seed {seed}: frontier missed a changed edge"
+        # Inserted edges are always in the frontier.
+        assert fr.frontier[d.inserted_new].all()
+
+
+def test_triangle_enumeration_matches_support():
+    from repro.core import support_numpy
+
+    for g in [erdos(50, 6.0, seed=0), clustered(3, 12, 0.7, seed=1), road(6, 0.2, seed=2)]:
+        tri = edge_triangles(g)
+        # Every triangle contributes one support unit to each of its edges.
+        s = np.bincount(tri.ravel(), minlength=g.nnz)
+        assert np.array_equal(s, support_numpy(g)), g.name
+
+
+# ------------------------------------------------------------------ #
+# Fixed-seed multi-step sessions: bit-identical to from-scratch
+# ------------------------------------------------------------------ #
+def test_session_multi_step_identical_to_decompose():
+    rng = np.random.default_rng(11)
+    for g0 in [erdos(50, 6.0, seed=0), clustered(3, 12, 0.7, seed=1)]:
+        sess = StreamingTrussSession.for_graph(g0, chunk=64)
+        for step in range(4):
+            res = sess.update(_random_batch(rng, sess.graph, 2, 1))
+            eng = KTrussEngine(sess.graph, chunk=64)
+            assert np.array_equal(
+                res.trussness, eng.decompose().trussness
+            ), f"{g0.name} step {step}"
+            assert res.kmax == sess.kmax
+            assert res.dispatches <= 1
+
+
+def test_session_delete_only_and_grow_only():
+    rng = np.random.default_rng(13)
+    g = clustered(2, 12, 0.8, seed=5)
+    sess = StreamingTrussSession.for_graph(g, chunk=64)
+    res = sess.update(_random_batch(rng, sess.graph, 0, 5))
+    assert np.array_equal(
+        res.trussness, trussness_numpy(sess.graph).astype(res.trussness.dtype)
+    )
+    res = sess.update(_random_batch(rng, sess.graph, 6, 0))
+    assert np.array_equal(
+        res.trussness, trussness_numpy(sess.graph).astype(res.trussness.dtype)
+    )
+
+
+def test_empty_frontier_update_costs_zero_dispatches():
+    # A 2x2 grid has no triangles: deleting an edge can change nothing.
+    g = road(3, 0.0, seed=0)
+    sess = StreamingTrussSession.for_graph(g, chunk=64)
+    base = sess.service.stats()["device_dispatches"]
+    e0 = tuple(sess.graph.edge_list()[0] - 1)
+    res = sess.update(EdgeBatch.of([], [e0]))
+    assert res.dispatches == 0 and res.frontier_size == 0
+    assert sess.service.stats()["device_dispatches"] == base
+    assert np.array_equal(res.trussness, trussness_numpy(sess.graph))
+
+
+# ------------------------------------------------------------------ #
+# Hypothesis property: random graphs x random batches
+# ------------------------------------------------------------------ #
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=28),
+    m=st.integers(min_value=6, max_value=70),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n_ins=st.integers(min_value=0, max_value=4),
+    n_del=st.integers(min_value=0, max_value=3),
+)
+def test_incremental_equals_scratch_property(n, m, seed, n_ins, n_del):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    if g.nnz == 0:
+        return
+    sess = StreamingTrussSession.for_graph(g, chunk=64)
+    res = sess.update(_random_batch(rng, g, n_ins, n_del))
+    assert np.array_equal(
+        res.trussness,
+        trussness_numpy(sess.graph).astype(res.trussness.dtype),
+    ), f"n={n} m={m} seed={seed} ins={n_ins} del={n_del}"
+
+
+# ------------------------------------------------------------------ #
+# Coalescing through the shared service
+# ------------------------------------------------------------------ #
+def test_concurrent_session_updates_coalesce_into_one_dispatch():
+    from repro.service import bucket_for
+
+    rng = np.random.default_rng(17)
+    svc = TrussService(max_batch=4, chunk=64)
+    # Collect 4 same-bucket graphs (different seeds can shift the
+    # power-of-two window/nnz bucket): 3 streams + 1 plain member.
+    groups: dict = {}
+    for s in range(64):
+        g = erdos(60, 6.0, seed=s)
+        groups.setdefault(bucket_for(g, chunk=64), []).append(g)
+        if len(groups[bucket_for(g, chunk=64)]) == 4:
+            graphs = groups[bucket_for(g, chunk=64)]
+            break
+    sessions = [svc.open_stream(g) for g in graphs[:3]]
+    before = svc.stats()["device_dispatches"]
+
+    pend = []
+    for sess in sessions:
+        # Deletes only: the mutated graphs stay inside the shared bucket.
+        pend.append(sess.submit_update(_random_batch(rng, sess.graph, 0, 2)))
+    extra = svc.submit_decompose(graphs[3])  # plain member, same bucket
+    assert svc.stats()["pending"] == 4
+    svc.flush()
+    # All three streams + the plain decompose completed in ONE dispatch.
+    assert svc.stats()["device_dispatches"] == before + 1
+    for sess, p in zip(sessions, pend):
+        res = p.result()
+        eng = KTrussEngine(sess.graph, chunk=64)
+        assert np.array_equal(res.trussness, eng.decompose().trussness)
+    assert np.array_equal(
+        extra.result().trussness,
+        KTrussEngine(graphs[3], chunk=64).decompose().trussness,
+    )
+
+
+def test_session_rejects_overlapping_updates():
+    g = erdos(40, 5.0, seed=0)
+    svc = TrussService(max_batch=2, chunk=64)
+    sess = svc.open_stream(g)
+    rng = np.random.default_rng(0)
+    sess.submit_update(_random_batch(rng, g, 1, 0))
+    with pytest.raises(RuntimeError):
+        sess.submit_update(_random_batch(rng, g, 1, 0))
+
+
+# ------------------------------------------------------------------ #
+# Satellite: aligned-slot capacity errors name the member and capacity
+# ------------------------------------------------------------------ #
+def test_pack_capacity_errors_are_specific():
+    big = erdos(50, 6.0, seed=0)
+    with pytest.raises(ValueError, match=r"slot_nnz=64"):
+        pack_problems([big], slot_n=64, slot_nnz=64, chunk=64, layout="aligned")
+    with pytest.raises(ValueError, match=r"slot_n=16"):
+        pack_problems([big], slot_n=16, slot_nnz=256, chunk=64, layout="aligned")
+    # Contiguous layout: an oversized member must fail even when the batch
+    # TOTAL fits (it would silently spill into the next slot's region).
+    small = erdos(20, 3.0, seed=1)
+    assert big.nnz > 128 and big.nnz + small.nnz < 2 * 128
+    with pytest.raises(ValueError, match=r"member 0.*slot_nnz=128"):
+        pack_problems(
+            [big, small], slot_n=64, slot_nnz=128, slots=2, chunk=64, layout="contig"
+        )
