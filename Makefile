@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-peel bench-stream lint
+.PHONY: test bench-smoke bench-peel bench-stream bench-api lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -18,10 +18,23 @@ bench-peel:
 		$(PYTHON) -m benchmarks.peel_bench --out BENCH_peel.json
 
 # Streaming-update benchmark -> BENCH_stream.json (updates/s + frontier
-# ratio at batch widths {1, 16, 256}; smoke asserts the frontier bound).
+# ratio at batch widths {1, 16, 256}; smoke asserts the frontier bound and
+# the one-full-triangle-enumeration-per-session cache claim).
 bench-stream:
 	$(PYTHON) -m benchmarks.stream_bench --smoke --out BENCH_stream.json
 
-# Byte-compile everything (import/syntax gate; no extra tooling required).
+# Declarative API benchmark -> BENCH_api.json (planner overhead µs/query +
+# which backend the auto rule chose per shape bucket; smoke asserts the
+# one-dispatch contract and that both formulations are exercised).
+bench-api:
+	$(PYTHON) -m benchmarks.api_bench --smoke --out BENCH_api.json
+
+# Byte-compile gate (no extra tooling required) + ruff when available
+# (CI installs it via requirements-dev.txt; bare containers skip it).
 lint:
 	$(PYTHON) -m compileall -q src tests benchmarks examples
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not installed; skipped (pip install -r requirements-dev.txt)"; \
+	fi

@@ -6,12 +6,11 @@ tables.  Sections:
   table1    — paper Table I analog (coarse/fine runtimes + ME/s)
   fig23     — paper Fig 2/3 analog (fine-over-coarse speedups + geomean)
   imbalance — load-imbalance statistics (the paper's §III-A mechanism)
-  moe       — beyond-paper: coarse vs fine MoE dispatch
   kernels   — Pallas kernel structural models + interpret-mode checks
-  roofline  — §Roofline terms per (arch × shape) from the dry-run JSONL
   service   — TrussService throughput + compile-cache hit rate (batch sweep)
   peel      — on-device peel: decompose graphs/s, sharded vs unsharded
   stream    — incremental truss maintenance: updates/s + frontier ratio
+  api       — repro.api planner overhead + backend auto-choice per bucket
 """
 
 from __future__ import annotations
@@ -69,16 +68,6 @@ def main() -> None:
         print(f"geomean_speedup,{geo:.2f}")
         print("paper_reference,CPU 1.48x / GPU 16.93x (K=3)")
 
-    if only in (None, "moe"):
-        _section("moe dispatch (beyond-paper)")
-        from . import moe_dispatch
-
-        rows = moe_dispatch.run_moe_dispatch()
-        cols = list(rows[0].keys())
-        print(",".join(cols))
-        for r in rows:
-            print(",".join(str(r[c]) for c in cols))
-
     if only in (None, "kernels"):
         _section("kernels (structural + interpret)")
         from . import kernels_bench
@@ -108,11 +97,11 @@ def main() -> None:
             stream_bench.run_stream_bench(widths=(1, 16), updates_per_width=2)
         )
 
-    if only in (None, "roofline"):
-        _section("roofline (from dry-run artifacts)")
-        from . import roofline
+    if only in (None, "api"):
+        _section("api (planner overhead + backend auto-choice)")
+        from . import api_bench
 
-        roofline.main()
+        api_bench.report(api_bench.run_api_bench())
 
     print(f"\n# total bench wall time: {time.time()-t_start:.1f}s")
 

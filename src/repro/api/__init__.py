@@ -1,0 +1,81 @@
+"""repro.api — the one front door to every K-truss workload.
+
+Declare *what* you want as :class:`TrussQuery` values; ``solve()`` (one
+shot) or :class:`Session` (long-lived serving, micro-batching, futures)
+lowers them through the :class:`Planner` onto interchangeable backends —
+``formulation={coarse,fine} × kernel={xla,pallas} × layout={contig,
+aligned}`` — registered in :mod:`repro.api.registry` and chosen per shape
+bucket by an auto rule keyed on the paper's load-imbalance statistics::
+
+    from repro.api import TrussQuery, solve
+
+    dec = solve(TrussQuery.decompose(g))             # trussness per edge
+    results = solve([TrussQuery.ktruss(g1, k=4),      # batched: one
+                     TrussQuery.kmax(g2)])            # dispatch per bucket
+
+The legacy entry points (``KTrussEngine``, ``TrussService``,
+``StreamingTrussSession``) are thin adapters over this module.
+"""
+
+from ..core.truss import KTrussResult, TrussDecomposition
+from .cache import (
+    Bucket,
+    CompileCache,
+    bucket_for,
+    build_peel,
+    enable_persistent_cache,
+)
+from .errors import TrussTimeoutError
+from .planner import Plan, PlannedBatch, Planner, QueryState, RequestStats
+from .query import PLACEMENTS, WORKLOADS, TrussQuery
+from .registry import (
+    FORMULATIONS,
+    KERNELS,
+    LAYOUTS,
+    BackendKey,
+    BackendSpec,
+    available_backends,
+    choose_backend,
+    default_kernel,
+    get_backend,
+    register_backend,
+)
+from .session import QueryQueue, Session, TrussFuture, solve
+
+__all__ = [
+    # query surface
+    "TrussQuery",
+    "WORKLOADS",
+    "PLACEMENTS",
+    "solve",
+    "Session",
+    "TrussFuture",
+    "TrussTimeoutError",
+    # planner / lowering
+    "Planner",
+    "Plan",
+    "PlannedBatch",
+    "QueryState",
+    "QueryQueue",
+    "RequestStats",
+    # backend registry
+    "BackendKey",
+    "BackendSpec",
+    "FORMULATIONS",
+    "KERNELS",
+    "LAYOUTS",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "choose_backend",
+    "default_kernel",
+    # shape buckets + compile cache
+    "Bucket",
+    "bucket_for",
+    "build_peel",
+    "CompileCache",
+    "enable_persistent_cache",
+    # result types
+    "KTrussResult",
+    "TrussDecomposition",
+]

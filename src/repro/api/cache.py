@@ -1,0 +1,180 @@
+"""Shape-bucket canonicalization + compile cache for the query API.
+
+XLA (and Pallas) executables are specialized to static shapes, so a naive
+server recompiles the fixed-point program for every distinct graph — tens
+of milliseconds to seconds per request.  Canonicalizing every incoming
+graph to power-of-two ``(n_pad, nnz_pad, window)`` buckets collapses the
+shape space: one executable per bucket serves every request (and every
+micro-batch) that lands in it.  GraphBLAST makes the same bet — reusable
+kernels behind a stable API beat per-input specialization.
+
+The compiled artifact is a *problem-polymorphic* on-device peel: the
+executor takes the ``FineProblem`` pytree as an argument, so any
+same-bucket problem — including a block-diagonal batch of them — reuses
+the program.  Thresholds are per-slot state advanced inside the compiled
+loop, which lets one dispatch run different k values *and* mixed
+ktruss/kmax/decompose/stream workloads to completion for every member of
+a packed batch (``repro.exec.peel``).  Cache keys are
+``(bucket, slots, variant)``: the slot count scales the packed shapes and
+the variant captures everything else that specializes the executable —
+the registry backend key, dataflow mode, and mesh placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Hashable, NamedTuple
+
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+
+__all__ = [
+    "Bucket",
+    "bucket_for",
+    "build_peel",
+    "CompileCache",
+    "enable_persistent_cache",
+]
+
+
+def enable_persistent_cache(cache_dir: str) -> None:
+    """Point XLA's persistent compilation cache at ``cache_dir``.
+
+    The in-process :class:`CompileCache` dedupes executables per
+    ``(bucket, slots, variant)`` key but dies with the process; wiring
+    JAX's persistent cache underneath means a restarted server's *first*
+    compile per bucket is a disk hit instead of a cold XLA compile
+    (skipped warmup).  Process-wide by necessity — the JAX cache is
+    global — and idempotent; opt in via ``Session(cache_dir=...)``.
+
+    The entry-size/compile-time floors are dropped to 0 so even the small
+    CPU-test executables round-trip (JAX's defaults skip sub-second
+    compiles, which would make a warm restart silently cold).
+    """
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+
+
+class Bucket(NamedTuple):
+    """Canonical power-of-two shape class of one graph slot.
+
+    A graph in this bucket is packed to ``n_pad`` vertices, ``nnz_pad``
+    directed nonzeros (twice that undirected) and intersected with windows
+    of width ``window``.  Batches of B same-bucket graphs use the scaled
+    shapes ``(B * n_pad, B * nnz_pad)``; the executor cache key is
+    ``(bucket, slots, variant)``.
+    """
+
+    n_pad: int
+    nnz_pad: int
+    window: int
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def bucket_for(g: CSRGraph, *, chunk: int = 256, min_window: int = 8) -> Bucket:
+    """Canonical shape bucket of one graph.
+
+    The window is sized to the max *undirected* degree so one bucket is
+    valid for every backend (eager needs out-degree, owner/pallas need
+    the symmetric degree).
+    """
+    deg = g.degrees()
+    indeg = np.bincount(g.colidx, minlength=g.n + 1)
+    und_max = int((deg + indeg).max(initial=0))
+    return Bucket(
+        n_pad=_next_pow2(max(g.n, 1)),
+        nnz_pad=_next_pow2(max(g.nnz, chunk)),
+        window=_next_pow2(max(min_window, und_max)),
+    )
+
+
+def build_peel(
+    *,
+    mode: str = "eager",
+    backend: str = "xla",
+    window: int,
+    chunk: int = 256,
+    max_iters: int | None = None,
+    mesh=None,
+):
+    """Compile-cachable on-device peel for one shape bucket.
+
+    Legacy bucket-config adapter over the exec layer (the registry's
+    :meth:`repro.api.BackendSpec.make_executor` is the first-class path);
+    kept so existing ``repro.service`` imports keep working.
+    """
+    from ..exec.peel import PeelExecutor
+
+    return PeelExecutor(
+        mode=mode,
+        backend=backend,
+        window=window,
+        chunk=chunk,
+        max_iters=max_iters,
+        mesh=mesh,
+    )
+
+
+@dataclasses.dataclass
+class CacheStats:
+    compiles: int = 0
+    hits: int = 0
+
+    @property
+    def requests(self) -> int:
+        return self.compiles + self.hits
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compiles": self.compiles,
+            "hits": self.hits,
+            "hit_rate": round(self.hit_rate, 4),
+        }
+
+
+class CompileCache:
+    """Executor store keyed by ``(bucket, slots, variant)`` with hit/miss
+    counters.
+
+    Each key maps to one peel executor built by ``builder(key)``; a key's
+    executable only ever sees one argument-shape signature (the
+    bucket-canonical one), so ``compiles`` counts actual XLA compilations,
+    not just builder calls.  ``variant`` folds in whatever else
+    specializes the program — the backend key, dataflow mode, and mesh
+    placement.
+    """
+
+    def __init__(self, builder: Callable[[tuple[Bucket, int, Hashable]], Callable]):
+        self._builder = builder
+        self._exes: dict[tuple[Bucket, int, Hashable], Callable] = {}
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def get(
+        self, bucket: Bucket, slots: int, variant: Hashable = "contig"
+    ) -> tuple[Callable, bool]:
+        """Return (executor, was_hit) for one bucket/slots/variant key."""
+        key = (bucket, int(slots), variant)
+        with self._lock:
+            exe = self._exes.get(key)
+            if exe is not None:
+                self.stats.hits += 1
+                return exe, True
+            self.stats.compiles += 1
+            exe = self._exes[key] = self._builder(key)
+            return exe, False
+
+    def __len__(self) -> int:
+        return len(self._exes)

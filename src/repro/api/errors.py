@@ -1,0 +1,34 @@
+"""Typed errors of the declarative query API."""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .cache import Bucket
+
+__all__ = ["TrussTimeoutError"]
+
+
+class TrussTimeoutError(TimeoutError):
+    """``TrussFuture.result(timeout=...)`` expired before the query resolved.
+
+    Carries enough context to act on — which shape bucket the request was
+    waiting in and how deep the session's queue was at expiry — instead of
+    a bare ``TimeoutError`` that forces callers to re-derive both.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        bucket: "Bucket | None" = None,
+        queue_depth: int = 0,
+        request_id: int | None = None,
+        waited_s: float = 0.0,
+    ):
+        super().__init__(message)
+        self.bucket = bucket
+        self.queue_depth = int(queue_depth)
+        self.request_id = request_id
+        self.waited_s = float(waited_s)

@@ -1,0 +1,383 @@
+"""Session + solve(): the one front door over the planner/backend registry.
+
+``solve(queries)`` is the one-shot form: assign, batch, dispatch, return
+results in submission order.  :class:`Session` is the serving form: a
+long-lived queue + compile cache where queries from many callers coalesce
+into shared dispatches (micro-batching), futures resolve on ``flush()``
+or transparently on ``result()`` (which drives only the owning query's
+``(bucket, backend)`` group), and streaming sessions ride the same queue.
+
+Everything the old ``KTrussEngine`` / ``TrussService`` /
+``StreamingTrussSession`` trio did separately is an adapter over this
+module now; the lowering itself lives in :class:`repro.api.Planner`.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from .cache import CompileCache, bucket_for, enable_persistent_cache
+from .errors import TrussTimeoutError
+from .planner import PlannedBatch, Planner, QueryState
+from .query import TrussQuery
+from .registry import BackendKey
+
+__all__ = ["QueryQueue", "TrussFuture", "Session", "solve"]
+
+_UNSET = object()  # result(): "no timeout given" vs. explicit None
+
+
+class QueryQueue:
+    """Arrival-ordered queue with same-group, deadline-aware batch formation.
+
+    A batch is formed by taking one pending query's ``(bucket, backend)``
+    group and draining up to ``max_batch`` same-group queries (FIFO within
+    the group, so no query starves behind an endless stream of other
+    groups).  With no explicit group the *most urgent* pending query picks
+    it: earliest absolute deadline first, arrival order among undeadlined
+    queries — LLM-serving-style deadline awareness at the batch former.
+    """
+
+    def __init__(self, *, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self._pending: deque[QueryState] = deque()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def enqueue(self, state: QueryState) -> None:
+        self._pending.append(state)
+
+    def drain(self) -> list[QueryState]:
+        """Remove and return every pending query (arrival order)."""
+        states = list(self._pending)
+        self._pending.clear()
+        return states
+
+    @staticmethod
+    def _urgency(state: QueryState) -> tuple[float, int]:
+        d = state.query.deadline_s
+        absolute = state.submitted_at + d if d is not None else float("inf")
+        return (absolute, state.id)
+
+    def next_batch(self, group=None) -> list[QueryState]:
+        """Drain up to ``max_batch`` queries sharing one group."""
+        if not self._pending:
+            return []
+        if group is None:
+            group = min(self._pending, key=self._urgency).group
+        batch: list[QueryState] = []
+        keep: deque[QueryState] = deque()
+        while self._pending:
+            st = self._pending.popleft()
+            if st.group == group and len(batch) < self.max_batch:
+                batch.append(st)
+            else:
+                keep.append(st)
+        self._pending = keep
+        now = time.perf_counter()
+        for st in batch:
+            st.stats.queue_time_s = now - st.submitted_at
+            st.stats.batch_size = len(batch)
+        return batch
+
+
+class TrussFuture:
+    """Handle to a submitted query; resolves when its batch runs."""
+
+    def __init__(self, session: "Session", state: QueryState):
+        self._session = session
+        self._state = state
+        self._result: Any = None
+        self._error: BaseException | None = None
+        self._done = False
+
+    @property
+    def request(self) -> QueryState:
+        return self._state
+
+    @property
+    def query(self) -> TrussQuery:
+        return self._state.query
+
+    @property
+    def stats(self):
+        return self._state.stats
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self, timeout: float | None = _UNSET) -> Any:
+        """Resolve this query, driving only its own ``(bucket, backend)``
+        group — other groups' queued work stays queued for their own
+        flush/poll.
+
+        ``timeout`` bounds the time spent driving the queue (checked
+        between batch dispatches — one in-flight dispatch is never
+        interrupted); ``timeout=0`` is non-blocking.  Left unset it
+        defaults to the query's remaining ``deadline_s`` budget (if any);
+        an explicit ``timeout=None`` waits until resolved.  On expiry
+        raises :class:`TrussTimeoutError` carrying the bucket and the
+        queue depth at expiry.
+        """
+        if timeout is _UNSET:
+            d = self._state.query.deadline_s
+            if d is None:
+                timeout = None
+            else:
+                elapsed = time.perf_counter() - self._state.submitted_at
+                timeout = max(0.0, d - elapsed)
+        t0 = time.perf_counter()
+        while not self._done:
+            waited = time.perf_counter() - t0
+            if timeout is not None and waited >= timeout:
+                raise TrussTimeoutError(
+                    f"query {self._state.id} ({self._state.query.workload}) "
+                    f"unresolved after {waited:.3f}s (timeout={timeout}s); "
+                    f"bucket={self._state.bucket}, "
+                    f"queue_depth={len(self._session.queue)}",
+                    bucket=self._state.bucket,
+                    queue_depth=len(self._session.queue),
+                    request_id=self._state.id,
+                    waited_s=waited,
+                )
+            batch = self._session.queue.next_batch(group=self._state.group)
+            if not batch:
+                raise RuntimeError(
+                    f"query {self._state.id} is unresolved but not queued"
+                )
+            self._session._run_batch(self._session._planned(batch))
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result: Any) -> None:
+        self._result = result
+        self._done = True
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._done = True
+
+
+class Session:
+    """Long-lived query session: one queue, one planner, one compile cache.
+
+    Config (all optional):
+      backend: force one registry backend for every query
+        (``BackendKey`` / ``"fine/xla/aligned"``); ``None`` = per-query
+        auto rule on the paper's imbalance statistics.
+      kernel / layout: defaults for the auto rule
+        (kernel ``None`` = pallas on TPU, xla elsewhere).
+      mode: override the backend's update dataflow (``eager``/``owner``).
+      max_batch: packed slots per dispatch (batches pad to this, so the
+        executable is independent of batch fullness).
+      chunk: task-chunk width (power of two).
+      max_iters: explicit peel iteration cap (None = provable bound).
+      mesh: shard packed slot blocks across devices
+        (``repro.distributed.slot_mesh``); forces the aligned layout.
+      cache_dir: persist compiled executables across processes.
+    """
+
+    def __init__(
+        self,
+        *,
+        backend: BackendKey | str | None = None,
+        kernel: str | None = None,
+        layout: str | None = None,
+        mode: str | None = None,
+        max_batch: int = 8,
+        chunk: int = 256,
+        max_iters: int | None = None,
+        mesh=None,
+        cache_dir: str | None = None,
+    ):
+        if cache_dir is not None:
+            enable_persistent_cache(cache_dir)
+        if mesh is not None:
+            mesh_size = int(np.prod(list(dict(mesh.shape).values())))
+            if max_batch % mesh_size:
+                raise ValueError(
+                    f"max_batch={max_batch} must divide evenly over the "
+                    f"mesh's {mesh_size} devices (slots shard whole)"
+                )
+        self.planner = Planner(
+            max_batch=max_batch,
+            chunk=chunk,
+            kernel=kernel,
+            layout=layout,
+            backend=backend,
+            mode=mode,
+            max_iters=max_iters,
+            mesh=mesh,
+        )
+        self.cache = CompileCache(self.planner.build_executor)
+        self.queue = QueryQueue(max_batch=max_batch)
+        self._futures: dict[int, TrussFuture] = {}
+        self.requests_served = 0
+        self.batches_run = 0
+        self.device_dispatches = 0
+        self.device_time_s = 0.0
+
+    # Convenience mirrors of the planner's config ----------------------- #
+    @property
+    def max_batch(self) -> int:
+        return self.planner.max_batch
+
+    @property
+    def chunk(self) -> int:
+        return self.planner.chunk
+
+    @property
+    def mesh(self):
+        return self.planner.mesh
+
+    # ------------------------------------------------------------------ #
+    # Submission
+    # ------------------------------------------------------------------ #
+    def submit(self, query: TrussQuery) -> TrussFuture:
+        """Assign (bucket + backend) and enqueue one declarative query."""
+        state = self.planner.assign(query)
+        fut = TrussFuture(self, state)
+        self._futures[state.id] = fut
+        self.queue.enqueue(state)
+        return fut
+
+    def solve(self, queries) -> list[Any]:
+        """Submit ``queries``, lower everything queued through one
+        declarative :meth:`Planner.plan`, dispatch batch by batch, and
+        return results in submission order.
+
+        (The serving path — ``flush``/``poll``/``result()`` — forms
+        batches from the queue instead, which is what makes it
+        deadline-aware; ``solve()`` waits for everything anyway.)
+        """
+        futs = [self.submit(q) for q in queries]
+        states = self.queue.drain()
+        now = time.perf_counter()
+        plan = self.planner.plan(states)
+        for batch in plan.batches:
+            for st in batch.queries:
+                st.stats.queue_time_s = now - st.submitted_at
+                st.stats.batch_size = len(batch.queries)
+            self._run_batch(batch)
+        return [f.result() for f in futs]
+
+    def open_stream(
+        self,
+        g: CSRGraph,
+        trussness: np.ndarray | None = None,
+        *,
+        cache_triangles: bool = True,
+    ):
+        """Open a :class:`repro.stream.StreamingTrussSession` on this session.
+
+        Runs the initial full decompose through the ordinary batched path
+        unless ``trussness`` is supplied; subsequent ``update()`` batches
+        are frontier-bounded ``stream_update`` queries on this queue.
+        """
+        from ..stream.session import StreamingTrussSession  # lazy: no cycle
+
+        return StreamingTrussSession(
+            self, g, trussness=trussness, cache_triangles=cache_triangles
+        )
+
+    def executor_for(self, g: CSRGraph):
+        """The compiled peel executor a query on ``g`` lowers onto, built
+        on first use.  Needs a session-pinned backend (auto-rule sessions
+        choose per query).  This is the legacy engine's hook to the
+        executor's ``dispatches`` counter (the one-dispatch contract)."""
+        if self.planner.backend is None:
+            raise ValueError(
+                "executor_for needs a session-pinned backend= (the auto "
+                "rule chooses per query)"
+            )
+        bucket = bucket_for(g, chunk=self.planner.chunk)
+        exe, _ = self.cache.get(
+            bucket,
+            self.planner.max_batch,
+            self.planner.cache_variant(self.planner.backend),
+        )
+        return exe
+
+    # ------------------------------------------------------------------ #
+    # Execution
+    # ------------------------------------------------------------------ #
+    def poll(self) -> int:
+        """Run at most one micro-batch; returns how many queries resolved."""
+        batch = self.queue.next_batch()
+        if not batch:
+            return 0
+        return self._run_batch(self._planned(batch))
+
+    def flush(self) -> int:
+        """Drain the queue; returns how many queries resolved."""
+        n = 0
+        while len(self.queue):
+            n += self.poll()
+        return n
+
+    def _planned(self, batch: list[QueryState]) -> PlannedBatch:
+        """Wrap a queue-formed (single-group) batch for the planner."""
+        return PlannedBatch(
+            bucket=batch[0].bucket,
+            backend=batch[0].backend,
+            queries=batch,
+            slots=self.planner.max_batch,
+        )
+
+    def _run_batch(self, planned: PlannedBatch) -> int:
+        batch = planned.queries
+        # The batch was already dequeued, so if the dispatch fails its
+        # futures must carry the error — otherwise they are stranded
+        # unresolvable.
+        try:
+            results = self.planner.execute(planned, self.cache)
+        except Exception as e:
+            for st in batch:
+                self._futures.pop(st.id)._fail(e)
+            raise
+        # execute() stamps the dispatch's own duration on every member;
+        # host-side packing is accounted separately (stats.pack_time_s).
+        self.device_time_s += batch[0].stats.device_time_s
+        self.device_dispatches += 1
+        self.batches_run += 1
+        for st, res in zip(batch, results):
+            self._futures.pop(st.id)._resolve(res)
+        self.requests_served += len(batch)
+        return len(batch)
+
+    # ------------------------------------------------------------------ #
+    # Observability
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        return {
+            "requests_served": self.requests_served,
+            "batches_run": self.batches_run,
+            "device_dispatches": self.device_dispatches,
+            "pending": len(self.queue),
+            "device_time_s": round(self.device_time_s, 6),
+            **{f"cache_{k}": v for k, v in self.cache.stats.row().items()},
+            **{f"planner_{k}": v for k, v in self.planner.stats().items()},
+        }
+
+
+def solve(queries, **session_kwargs) -> Any:
+    """One-shot front door: lower and run a set of declarative queries.
+
+    ``queries`` is a :class:`TrussQuery` or an iterable of them; results
+    come back in submission order (a lone query returns its lone result).
+    Session knobs (``backend=``, ``mesh=``, ``max_batch=``, ...) pass
+    through — see :class:`Session`.
+    """
+    single = isinstance(queries, TrussQuery)
+    qs = [queries] if single else list(queries)
+    results = Session(**session_kwargs).solve(qs)
+    return results[0] if single else results

@@ -1,56 +1,21 @@
-"""Config registry: the 10 assigned architectures + shapes + paper workload.
+"""Workload configs: the paper's K-truss benchmark instances + shape specs.
 
-``get_config(name, smoke=False)`` resolves arch ids (dashes ok) to
-:class:`~repro.models.config.ModelConfig`.
+The LLM architecture registry that used to live here was dead seed code,
+removed when ``repro.api`` became the single front door; what remains is
+the paper-calibrated graph suite (:mod:`.ktruss`) and the generic shape
+registry (:mod:`.shapes`).
 """
 
 from __future__ import annotations
 
-from ..models.config import ModelConfig
-from . import (
-    gemma2_9b,
-    internvl2_1b,
-    kimi_k2_1t_a32b,
-    llama3_2_1b,
-    llama4_maverick_400b_a17b,
-    qwen2_0_5b,
-    recurrentgemma_9b,
-    rwkv6_7b,
-    seamless_m4t_medium,
-    smollm_360m,
-)
-from .shapes import SHAPES, ShapeSpec, cell_is_valid, input_specs, materialize
-
-_MODULES = {
-    "seamless-m4t-medium": seamless_m4t_medium,
-    "gemma2-9b": gemma2_9b,
-    "qwen2-0.5b": qwen2_0_5b,
-    "smollm-360m": smollm_360m,
-    "llama3.2-1b": llama3_2_1b,
-    "recurrentgemma-9b": recurrentgemma_9b,
-    "internvl2-1b": internvl2_1b,
-    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
-    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
-    "rwkv6-7b": rwkv6_7b,
-}
-
-ARCH_NAMES = tuple(_MODULES)
-
-
-def get_config(name: str, smoke: bool = False) -> ModelConfig:
-    key = name.replace("_", "-")
-    if key not in _MODULES:
-        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
-    mod = _MODULES[key]
-    return mod.SMOKE if smoke else mod.CONFIG
-
+from .ktruss import BENCH_GRAPHS, K_SETTINGS, LARGE_GRAPHS, KTrussBench
+from .shapes import SHAPES, ShapeSpec
 
 __all__ = [
-    "ARCH_NAMES",
-    "get_config",
+    "BENCH_GRAPHS",
+    "K_SETTINGS",
+    "LARGE_GRAPHS",
+    "KTrussBench",
     "SHAPES",
     "ShapeSpec",
-    "cell_is_valid",
-    "input_specs",
-    "materialize",
 ]

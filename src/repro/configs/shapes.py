@@ -1,22 +1,9 @@
-"""Assigned input-shape registry + ShapeDtypeStruct builders for the dry-run.
+"""Named input-shape registry (generic ShapeDtypeStruct builders).
 
-Four shapes per LM architecture (assignment spec):
-
-  train_4k    : seq 4096,  global_batch 256  -> train_step
-  prefill_32k : seq 32768, global_batch 32   -> prefill_step
-  decode_32k  : seq 32768, global_batch 128  -> decode_step (cache = seq)
-  long_500k   : seq 524288, global_batch 1   -> decode_step, sub-quadratic
-                archs only (ssm / hybrid); full-attention archs skip it.
-
-Family conventions (DESIGN.md §8):
-  * enc-dec ([audio]): ``seq_len`` is the decoder stream; the encoder sees
-    ``cfg.frontend_len`` precomputed frame embeddings (stub frontend).
-    train_4k splits seq into src/tgt halves so total token work ≈ seq.
-  * vlm: ``cfg.frontend_len`` patch embeddings prefix the token stream.
-
-``input_specs`` returns ShapeDtypeStructs only — nothing is allocated; the
-same builders feed ``.lower()`` in the dry-run and the smoke tests (with
-concrete arrays via ``materialize``).
+Only the architecture-independent pieces of the seed's dry-run shape
+grid survive here: :class:`ShapeSpec` names a (sequence, batch, kind)
+cell and :func:`materialize` turns ShapeDtypeStructs into concrete smoke
+arrays.  The LM-specific spec builders left with the model stack.
 """
 
 from __future__ import annotations
@@ -27,10 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.config import ModelConfig
-from ..models.registry import Model
-
-__all__ = ["ShapeSpec", "SHAPES", "input_specs", "materialize", "cell_is_valid"]
+__all__ = ["ShapeSpec", "SHAPES", "materialize"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,71 +31,6 @@ SHAPES: dict[str, ShapeSpec] = {
     "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
 }
-
-
-def cell_is_valid(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
-    """(valid?, reason) — encodes the assignment's skip rules."""
-    if shape.name == "long_500k" and not cfg.sub_quadratic():
-        return False, "long_500k needs sub-quadratic attention (full-attn arch)"
-    return True, ""
-
-
-def _tok(b: int, s: int):
-    return jax.ShapeDtypeStruct((b, s), jnp.int32)
-
-
-def input_specs(
-    cfg: ModelConfig, shape: ShapeSpec, *, scale_batch: float = 1.0
-) -> dict:
-    """ShapeDtypeStruct stand-ins for the entry point of (cfg, shape)."""
-    b = max(1, int(shape.global_batch * scale_batch))
-    s = shape.seq_len
-    d = cfg.d_model
-    emb_dt = jnp.dtype(cfg.dtype)
-
-    if shape.kind == "train":
-        if cfg.is_encdec:
-            se = s // 2
-            st = s - se
-            return {
-                "src_embeds": jax.ShapeDtypeStruct((b, se, d), emb_dt),
-                "tokens": _tok(b, st),
-                "labels": _tok(b, st),
-            }
-        if cfg.family == "vlm":
-            f = cfg.frontend_len
-            return {
-                "embeds": jax.ShapeDtypeStruct((b, f, d), emb_dt),
-                "tokens": _tok(b, s - f),
-                "labels": _tok(b, s - f),
-            }
-        return {"tokens": _tok(b, s), "labels": _tok(b, s)}
-
-    if shape.kind == "prefill":
-        if cfg.is_encdec:
-            return {
-                "src_embeds": jax.ShapeDtypeStruct(
-                    (b, cfg.frontend_len, d), emb_dt
-                ),
-                "tokens": _tok(b, s),
-            }
-        if cfg.family == "vlm":
-            f = cfg.frontend_len
-            return {
-                "embeds": jax.ShapeDtypeStruct((b, f, d), emb_dt),
-                "tokens": _tok(b, s - f),
-            }
-        return {"tokens": _tok(b, s)}
-
-    if shape.kind == "decode":
-        model = Model(cfg)
-        states = jax.eval_shape(lambda: model.init_states(b, s))
-        return {
-            "token": _tok(b, 1),
-            "states": states,
-            "pos": jax.ShapeDtypeStruct((), jnp.int32),
-        }
-    raise ValueError(shape.kind)
 
 
 def materialize(specs, seed: int = 0):

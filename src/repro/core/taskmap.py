@@ -11,8 +11,8 @@ math shows up in every load-balanced irregular dispatch:
   tokens; group boundaries come from a sort + the same searchsorted.
 * Ragged paged-KV gathers in serving.
 
-These helpers are shared by ``repro.core`` (the paper's algorithm) and
-``repro.models.moe`` (the beyond-paper application).
+These helpers back ``repro.core`` (the paper's algorithm); the same
+row-of-task idiom generalizes to any ragged segmented gather.
 """
 
 from __future__ import annotations

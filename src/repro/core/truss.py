@@ -1,17 +1,19 @@
-"""K-truss driver: support → prune fixed-point loop, K_max search, public API.
+"""K-truss driver: support → prune fixed-point loop, K_max search.
 
-This is the system's user-facing entry to the paper's algorithm:
+The paper-faithful single-graph object (``repro.api`` is the system's
+front door; multi-level workloads here are adapters over it):
 
     engine = KTrussEngine(graph, granularity="fine", mode="eager")
     res = engine.ktruss(k=3)           # alive mask + supports + iterations
-    kmax = engine.kmax()               # largest non-empty truss
+    kmax = engine.kmax()               # largest non-empty truss (via repro.api)
 
 ``granularity`` selects the paper's axis of study:
   * ``"coarse"`` — Algorithm 2 (row tasks; the baseline).
   * ``"fine"``   — Algorithm 3 (nonzero tasks; the contribution).
 ``mode`` selects the update dataflow (``"eager"`` scatter vs ``"owner"``
 collision-free; DESIGN.md §4), and ``backend`` selects XLA ops or the
-Pallas TPU kernels (interpret-mode on CPU).
+Pallas TPU kernels (interpret-mode on CPU) — together they map onto a
+``repro.api`` registry backend for the ``kmax``/``decompose`` paths.
 """
 
 from __future__ import annotations
@@ -150,7 +152,7 @@ class KTrussEngine:
                 row_chunk=self.row_chunk,
             )
         self._fixed_point = jax.jit(self._fixed_point_impl, static_argnums=(1,))
-        self._peel_exec = None
+        self._api = None
 
     # ------------------------------------------------------------------ #
     def support(self, alive: jax.Array) -> jax.Array:
@@ -192,36 +194,47 @@ class KTrussEngine:
         )
 
     # ------------------------------------------------------------------ #
-    # Device-resident peel: kmax / decompose in ONE dispatch
+    # Device-resident peel: kmax / decompose in ONE dispatch, lowered
+    # through repro.api (the one pack/cache/dispatch path)
     # ------------------------------------------------------------------ #
+    def _api_session(self):
+        """Lazily built 1-slot :class:`repro.api.Session` pinned to this
+        engine's (granularity, kernel, mode) as a registry backend.
+
+        ``kmax``/``decompose`` are adapters over it — the engine keeps no
+        peel/pack/cache glue of its own.  The api path buckets the graph
+        itself (power-of-two window from the undirected degree), so the
+        engine's custom ``window``/``bucketed`` knobs only shape its own
+        ``ktruss``/``support`` closures.  Each call re-packs the graph
+        into its bucket (O(nnz) host numpy) — unlike the old
+        engine-resident problem, but dominated by the device peel it
+        precedes; the compiled executable itself is cached per bucket.
+        """
+        if self._api is None:
+            from ..api import BackendKey, Session  # lazy: core stays api-free
+
+            chunk = self.chunk
+            if chunk & (chunk - 1):  # api packing wants a power of two
+                chunk = 1 << (chunk.bit_length() - 1)
+            self._api = Session(
+                backend=BackendKey(
+                    "coarse" if self.granularity == "coarse" else "fine",
+                    self.backend,
+                    "aligned",
+                ),
+                mode=self.mode,
+                max_batch=1,
+                chunk=max(8, chunk),
+            )
+        return self._api
+
     @property
     def peel_executor(self):
-        """Lazily built 1-slot :class:`repro.exec.PeelExecutor`.
-
-        Reuses this engine's support closure (same granularity / mode /
-        backend / bucketing), so the whole level peel — every threshold,
-        every fixed-point iteration — runs inside one compiled
-        ``lax.while_loop`` with no per-level host round-trips.  Its
-        ``dispatches`` counter is the test hook for that contract.
-        """
-        if self._peel_exec is None:
-            from ..exec import PeelExecutor  # lazy: core stays exec-free
-
-            # max_iters stays None: the engine's own max_iters budgets one
-            # ktruss fixed point per level; the peel's total-trip cap is
-            # its provable bound (see exec.build_peel).
-            self._peel_exec = PeelExecutor(
-                support=lambda _p, alive: self._support(alive),
-            )
-        return self._peel_exec
-
-    def _peel_state(self, k_start: int, single_level: bool = False):
-        return self.peel_executor.peel(
-            self.problem,
-            slot_ids=np.zeros(self.problem.nnz_pad, np.int32),
-            k0=[int(k_start)],
-            single_level=[single_level],
-        )
+        """The on-device peel executor behind :meth:`kmax`/:meth:`decompose`
+        (one compiled ``lax.while_loop``, no per-level host round-trips).
+        Its ``dispatches`` counter is the test hook for the one-dispatch
+        contract."""
+        return self._api_session().executor_for(self.g)
 
     def kmax(self, k_start: int = 3) -> int:
         """Largest k with a non-empty truss (0 if even the ``k_start``-truss
@@ -229,7 +242,9 @@ class KTrussEngine:
 
         Per-level masks/supports live on :meth:`peel_levels`.
         """
-        return int(self._peel_state(k_start).kmax[0])
+        from ..api import TrussQuery  # lazy: core stays api-free
+
+        return int(self._api_session().solve([TrussQuery.kmax(self.g, k_start)])[0])
 
     def decompose(self, k_start: int = 3) -> TrussDecomposition:
         """Full truss decomposition in one device dispatch.
@@ -239,14 +254,9 @@ class KTrussEngine:
         ``k_start - 1`` (= 2 by default: membership in the 2-truss is
         vacuous).
         """
-        st = self._peel_state(k_start)
-        nnz = self.g.nnz
-        trussness = np.asarray(st.trussness)[:nnz].copy()
-        return TrussDecomposition(
-            trussness=trussness,
-            kmax=int(trussness.max(initial=0)) if nnz else 0,
-            levels=int(st.levels[0]),
-        )
+        from ..api import TrussQuery  # lazy: core stays api-free
+
+        return self._api_session().solve([TrussQuery.decompose(self.g, k_start)])[0]
 
     # ------------------------------------------------------------------ #
     # Host-side level peel: per-level results (the only API that needs a

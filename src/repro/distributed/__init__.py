@@ -1,30 +1,10 @@
-"""Distributed substrate: sharding rules, elastic meshes, k-truss slot meshes."""
+"""Distributed substrate: the K-truss slot mesh + packed-batch sharding."""
 
-from .elastic import derive_mesh, mesh_shape_for, spare_devices
 from .ktruss import SLOT_AXIS, peel_problem_specs, shard_peel_args, slot_mesh
-from .sharding import (
-    MeshAxes,
-    batch_specs,
-    logits_spec,
-    mesh_axes,
-    named,
-    param_specs,
-    state_specs,
-)
 
 __all__ = [
-    "derive_mesh",
-    "mesh_shape_for",
-    "spare_devices",
     "SLOT_AXIS",
     "peel_problem_specs",
     "shard_peel_args",
     "slot_mesh",
-    "MeshAxes",
-    "batch_specs",
-    "logits_spec",
-    "mesh_axes",
-    "named",
-    "param_specs",
-    "state_specs",
 ]

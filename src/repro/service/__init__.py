@@ -1,17 +1,19 @@
-"""Batched multi-graph K-truss serving subsystem.
+"""Legacy serving subsystem — adapters over :mod:`repro.api`.
 
-Layers (bottom-up):
+.. deprecated::
+    ``repro.api`` is the one front door now: declare work as
+    :class:`repro.api.TrussQuery` values and run them through
+    ``repro.api.solve()`` or a :class:`repro.api.Session`.  This package
+    keeps the previous surface importable for one release:
 
-* :mod:`repro.exec` — the device-resident peel every workload lowers onto.
-* :mod:`.cache`   — shape-bucket canonicalization + compile cache (one
-                    peel executor per ``(bucket, slots, layout)`` key).
-* :mod:`.batcher` — request queue + same-bucket micro-batcher over the
-                    slot-aligned block-diagonal packing in
-                    :mod:`repro.graphs.pack`.
-* :mod:`.service` — ``TrussService``: submit/poll futures, per-request
-                    stats, ``ktruss(k)`` / ``kmax()`` / ``decompose()``
-                    workloads in one dispatch per batch; ``mesh=`` shards
-                    packed slots across devices.
+    * :class:`TrussService` — thin adapter over ``repro.api.Session``
+      (pinned to one registry backend, exactly the old behavior);
+    * ``TrussFuture`` — re-export of :class:`repro.api.TrussFuture`;
+    * ``Bucket`` / ``bucket_for`` / ``CompileCache`` /
+      ``enable_persistent_cache`` / ``build_peel`` — re-exports of
+      :mod:`repro.api.cache`;
+    * ``Request`` / ``RequestStats`` / ``MicroBatcher`` — re-exports of
+      the api queue types.
 """
 
 from .batcher import MicroBatcher, Request, RequestStats

@@ -1,124 +1,44 @@
-"""Request queue + micro-batcher: pack same-bucket requests into one dispatch.
+"""Deprecation shim: the queue + micro-batcher moved to ``repro.api``.
 
-Requests accumulate in an arrival-ordered queue; a batch is formed by
-taking the oldest pending request's shape bucket and draining up to
-``max_batch`` same-bucket requests (FIFO within the bucket, so no request
-starves behind an endless stream of other buckets).  The batch is then
-packed block-diagonally (``repro.graphs.pack``) so one device dispatch
-serves all members.
+``Request`` is now :class:`repro.api.QueryState` (a submitted
+``TrussQuery`` with its planner assignment — note the constructor takes
+``query=``, not the old ``graph``/``workload`` fields, though the old
+read accessors ``.graph``/``.workload``/``.k`` still work),
+``MicroBatcher`` keeps its old keyword surface below, and the
+block-diagonal packing itself lives in :class:`repro.api.Planner`.
+Importable for one release; new code should use ``repro.api``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import time
-from collections import deque
-from typing import Optional
-
-import numpy as np
-
-from ..graphs.csr import CSRGraph
-from ..graphs.pack import PackedProblem, pack_problems
-from .cache import Bucket
+from ..api.cache import Bucket
+from ..api.planner import QueryState as Request  # noqa: F401 — re-export
+from ..api.planner import RequestStats  # noqa: F401 — re-export
+from ..api.session import QueryQueue
 
 __all__ = ["Request", "RequestStats", "MicroBatcher"]
 
-_ids = itertools.count()
 
+class MicroBatcher(QueryQueue):
+    """Old-surface adapter over :class:`repro.api.QueryQueue`.
 
-@dataclasses.dataclass
-class RequestStats:
-    """Per-request observability (exposed on the future)."""
+    Accepts the legacy ``chunk=`` constructor knob (now a planner
+    concern, ignored here) and the legacy ``next_batch(bucket=...)``
+    spelling — a bare :class:`Bucket` selects the oldest pending query in
+    that bucket and batches its full ``(bucket, backend)`` group.
+    """
 
-    queue_time_s: float = 0.0  # submit -> batch formation
-    pack_time_s: float = 0.0  # host-side block-diagonal packing (shared)
-    device_time_s: float = 0.0  # the batch's single peel dispatch (shared)
-    compile_hit: bool = False  # did the batch reuse a cached executable
-    bucket: Optional[Bucket] = None
-    batch_size: int = 0  # real members in the packed batch
-    rounds: int = 0  # fixed-point levels THIS member peeled
-    iterations: int = 0  # prune iterations while THIS member was live
+    def __init__(self, *, max_batch: int = 8, chunk: int | None = None):
+        del chunk  # folded into repro.api.Planner
+        super().__init__(max_batch=max_batch)
 
-
-@dataclasses.dataclass
-class Request:
-    graph: CSRGraph
-    workload: str  # "ktruss" | "kmax" | "decompose" | "stream"
-    k: int  # target k (ktruss) or starting k (kmax/decompose/stream)
-    bucket: Bucket
-    # Streaming re-peel members only (workload == "stream"): which of the
-    # member's real edges are free to peel (the affected frontier) and the
-    # known trussness the complement is frozen at.  None on ordinary
-    # requests — the member starts fully alive, nothing frozen.
-    alive0: Optional["np.ndarray"] = None  # (nnz,) bool
-    frozen_truss: Optional["np.ndarray"] = None  # (nnz,) int32
-    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
-    id: int = dataclasses.field(default_factory=lambda: next(_ids))
-    stats: RequestStats = dataclasses.field(default_factory=RequestStats)
-
-
-class MicroBatcher:
-    """Arrival-ordered queue with same-bucket batch formation."""
-
-    def __init__(self, *, max_batch: int = 8, chunk: int = 256):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        self.max_batch = int(max_batch)
-        self.chunk = int(chunk)
-        self._pending: deque[Request] = deque()
-
-    def __len__(self) -> int:
-        return len(self._pending)
-
-    def enqueue(self, req: Request) -> None:
-        self._pending.append(req)
-
-    def next_batch(self, bucket: Bucket | None = None) -> list[Request]:
-        """Drain up to ``max_batch`` requests sharing one bucket.
-
-        With no argument the oldest pending request's bucket is taken
-        (FIFO, so no bucket starves); passing ``bucket`` forms a batch for
-        that bucket only, leaving every other bucket queued — the targeted
-        path behind ``TrussFuture.result()``.
-        """
-        if not self._pending:
-            return []
-        if bucket is None:
-            bucket = self._pending[0].bucket
-        batch: list[Request] = []
-        keep: deque[Request] = deque()
-        while self._pending:
-            req = self._pending.popleft()
-            if req.bucket == bucket and len(batch) < self.max_batch:
-                batch.append(req)
-            else:
-                keep.append(req)
-        self._pending = keep
-        now = time.perf_counter()
-        for req in batch:
-            req.stats.queue_time_s = now - req.submitted_at
-            req.stats.bucket = bucket
-            req.stats.batch_size = len(batch)
-        return batch
-
-    def pack(self, batch: list[Request]) -> PackedProblem:
-        """Slot-aligned block-diagonal pack, always padded to ``max_batch``
-        slots so the packed shapes — and hence the compiled executable — do
-        not depend on how full the batch is.  The aligned layout keeps each
-        member's edge lanes inside its own slot block, which is what lets
-        the executor shard whole slots across a mesh."""
-        t0 = time.perf_counter()
-        bucket = batch[0].bucket
-        packed = pack_problems(
-            [r.graph for r in batch],
-            slot_n=bucket.n_pad,
-            slot_nnz=bucket.nnz_pad,
-            slots=self.max_batch,
-            chunk=self.chunk,
-            layout="aligned",
-        )
-        dt = time.perf_counter() - t0
-        for req in batch:
-            req.stats.pack_time_s = dt
-        return packed
+    def next_batch(self, bucket=None, group=None):
+        if group is None and bucket is not None:
+            if isinstance(bucket, Bucket):
+                st = next((s for s in self._pending if s.bucket == bucket), None)
+                if st is None:
+                    return []
+                group = st.group
+            else:  # already a (bucket, backend) group
+                group = bucket
+        return super().next_batch(group)

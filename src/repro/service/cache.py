@@ -1,36 +1,20 @@
-"""Shape-bucket compile cache for the K-truss serving layer.
+"""Deprecation shim: the shape-bucket compile cache moved to ``repro.api``.
 
-XLA (and Pallas) executables are specialized to static shapes, so a naive
-server recompiles the fixed-point program for every distinct graph — tens
-of milliseconds to seconds per request.  Canonicalizing every incoming
-graph to power-of-two ``(n_pad, nnz_pad, window)`` buckets collapses the
-shape space: one executable per bucket serves every request (and every
-micro-batch) that lands in it.  GraphBLAST makes the same bet — reusable
-kernels behind a stable API beat per-input specialization.
-
-The compiled artifact is a *problem-polymorphic* on-device peel: unlike
-``KTrussEngine`` (which closes over one graph's arrays), the executor
-takes the :class:`FineProblem` pytree as an argument, so any same-bucket
-problem — including a block-diagonal batch of them — reuses the program.
-Thresholds are per-slot state advanced inside the compiled loop, which
-lets one dispatch run different k values *and* mixed
-ktruss/kmax/decompose workloads to completion for every member of a
-packed batch (``repro.exec.peel``).  Cache keys are
-``(bucket, slots, layout)``: the slot count scales the packed shapes and
-the layout captures packing alignment + mesh placement, each of which
-specializes the executable.
+Everything here re-exports from :mod:`repro.api.cache` so existing
+imports (``from repro.service.cache import bucket_for``) keep working one
+release; new code should import from ``repro.api``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import threading
-from typing import Callable, Hashable, NamedTuple
-
-import numpy as np
-
-from ..exec.peel import PeelExecutor
-from ..graphs.csr import CSRGraph
+from ..api.cache import (  # noqa: F401 — re-exports
+    Bucket,
+    CacheStats,
+    CompileCache,
+    bucket_for,
+    build_peel,
+    enable_persistent_cache,
+)
 
 __all__ = [
     "Bucket",
@@ -39,146 +23,3 @@ __all__ = [
     "CompileCache",
     "enable_persistent_cache",
 ]
-
-
-def enable_persistent_cache(cache_dir: str) -> None:
-    """Point XLA's persistent compilation cache at ``cache_dir``.
-
-    The in-process :class:`CompileCache` dedupes executables per
-    ``(bucket, slots, layout)`` key but dies with the process; wiring JAX's
-    persistent cache underneath means a restarted server's *first* compile
-    per bucket is a disk hit instead of a cold XLA compile (skipped
-    warmup).  Process-wide by necessity — the JAX cache is global — and
-    idempotent; opt in via ``TrussService(cache_dir=...)``.
-
-    The entry-size/compile-time floors are dropped to 0 so even the small
-    CPU-test executables round-trip (JAX's defaults skip sub-second
-    compiles, which would make a warm restart silently cold).
-    """
-    import jax
-
-    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
-    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
-    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
-
-
-class Bucket(NamedTuple):
-    """Canonical power-of-two shape class of one graph slot.
-
-    A graph in this bucket is packed to ``n_pad`` vertices, ``nnz_pad``
-    directed nonzeros (twice that undirected) and intersected with windows
-    of width ``window``.  Batches of B same-bucket graphs use the scaled
-    shapes ``(B * n_pad, B * nnz_pad)``; the executor cache key is
-    ``(bucket, slots, layout)``.
-    """
-
-    n_pad: int
-    nnz_pad: int
-    window: int
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, int(x - 1).bit_length())
-
-
-def bucket_for(g: CSRGraph, *, chunk: int = 256, min_window: int = 8) -> Bucket:
-    """Canonical shape bucket of one graph.
-
-    The window is sized to the max *undirected* degree so one bucket is
-    valid for every support mode (eager needs out-degree, owner/pallas need
-    the symmetric degree).
-    """
-    deg = g.degrees()
-    indeg = np.bincount(g.colidx, minlength=g.n + 1)
-    und_max = int((deg + indeg).max(initial=0))
-    return Bucket(
-        n_pad=_next_pow2(max(g.n, 1)),
-        nnz_pad=_next_pow2(max(g.nnz, chunk)),
-        window=_next_pow2(max(min_window, und_max)),
-    )
-
-
-def build_peel(
-    *,
-    mode: str = "eager",
-    backend: str = "xla",
-    window: int,
-    chunk: int = 256,
-    max_iters: int | None = None,
-    mesh=None,
-) -> PeelExecutor:
-    """Compile-cachable on-device peel for one shape bucket.
-
-    The bucket-config adapter over the exec layer: builds the support
-    function from ``(mode, backend, window, chunk)`` and returns a
-    :class:`repro.exec.PeelExecutor` (``repro.exec.build_peel`` is the
-    lower-level hook taking an explicit support callable).  The executor's
-    jitted peel takes the problem pytree (plus per-slot k/workload
-    vectors) as arguments, so it serves every same-bucket batch; shapes
-    come from the arguments, so the jit cache holds exactly one entry per
-    ``(bucket, slots, layout)`` key.
-    """
-    return PeelExecutor(
-        mode=mode,
-        backend=backend,
-        window=window,
-        chunk=chunk,
-        max_iters=max_iters,
-        mesh=mesh,
-    )
-
-
-@dataclasses.dataclass
-class CacheStats:
-    compiles: int = 0
-    hits: int = 0
-
-    @property
-    def requests(self) -> int:
-        return self.compiles + self.hits
-
-    @property
-    def hit_rate(self) -> float:
-        return self.hits / self.requests if self.requests else 0.0
-
-    def row(self) -> dict:
-        return {
-            "compiles": self.compiles,
-            "hits": self.hits,
-            "hit_rate": round(self.hit_rate, 4),
-        }
-
-
-class CompileCache:
-    """Executor store keyed by ``(bucket, slots, layout)`` with hit/miss
-    counters.
-
-    Each key maps to one peel executor built by ``builder(key)``; a key's
-    executable only ever sees one argument-shape signature (the
-    bucket-canonical one), so ``compiles`` counts actual XLA compilations,
-    not just builder calls.  ``layout`` folds in whatever else specializes
-    the program — packing alignment and mesh placement.
-    """
-
-    def __init__(self, builder: Callable[[tuple[Bucket, int, Hashable]], Callable]):
-        self._builder = builder
-        self._exes: dict[tuple[Bucket, int, Hashable], Callable] = {}
-        self._lock = threading.Lock()
-        self.stats = CacheStats()
-
-    def get(
-        self, bucket: Bucket, slots: int, layout: Hashable = "contig"
-    ) -> tuple[Callable, bool]:
-        """Return (executor, was_hit) for one bucket/slots/layout key."""
-        key = (bucket, int(slots), layout)
-        with self._lock:
-            exe = self._exes.get(key)
-            if exe is not None:
-                self.stats.hits += 1
-                return exe, True
-            self.stats.compiles += 1
-            exe = self._exes[key] = self._builder(key)
-            return exe, False
-
-    def __len__(self) -> int:
-        return len(self._exes)

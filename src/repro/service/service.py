@@ -1,86 +1,43 @@
-"""TrussService: batched, cache-aware K-truss serving front end.
+"""TrussService: the legacy batched serving front end (adapter).
 
-Workloads (per request):
+.. deprecated::
+    ``TrussService`` is a thin adapter over :class:`repro.api.Session` —
+    the declarative query API is the one front door now::
 
-* ``ktruss(k)``    — membership mask + supports of the k-truss.
-* ``kmax()``       — largest non-empty truss (int).
-* ``decompose()``  — full truss decomposition (trussness per edge).
+        from repro.api import Session, TrussQuery
 
-Flow: ``submit_*`` canonicalizes the graph to a shape bucket and enqueues;
-``flush`` drains the queue in same-bucket micro-batches.  Each batch is
-packed block-diagonally with slot-aligned edge lanes and handed to the
-bucket's cached :class:`repro.exec.PeelExecutor`, which peels **every**
-truss level of **every** member on device in ONE dispatch — per-slot
-thresholds advance inside the compiled loop, ktruss members retire at
-their first fixed point, kmax/decompose members peel to exhaustion — and
-the service reads back one final ``(alive, support, trussness, kmax,
-levels)`` state.  With ``mesh=`` the packed slot blocks are sharded across
-devices (``repro.distributed.ktruss``).  Futures resolve on flush (or
-transparently on ``result()``, which polls only the owning request's
-bucket); per-request stats expose queue/pack/device time, per-member
-levels/iterations, and whether the batch hit the compile cache.
+        s = Session(max_batch=8)
+        fut = s.submit(TrussQuery.ktruss(g, k=4))
+
+    The adapter keeps one release of compatibility: every ``submit_*``
+    method builds the equivalent :class:`repro.api.TrussQuery` and hands
+    it to the session, so queueing, bucketing, packing, compile caching,
+    and dispatch all run through the single ``repro.api`` lowering path.
+    ``TrussFuture`` *is* :class:`repro.api.TrussFuture` (re-exported).
 """
 
 from __future__ import annotations
 
-import time
-from typing import Any
-
 import numpy as np
 
-from ..core.truss import KTrussResult, TrussDecomposition
+from ..api.registry import BackendKey
+from ..api.session import Session, TrussFuture
+from ..api.query import TrussQuery
 from ..graphs.csr import CSRGraph
-from .batcher import MicroBatcher, Request, RequestStats
-from .cache import (
-    Bucket,
-    CompileCache,
-    bucket_for,
-    build_peel,
-    enable_persistent_cache,
-)
 
 __all__ = ["TrussFuture", "TrussService"]
 
 
-class TrussFuture:
-    """Handle to a submitted request; resolves when its batch runs."""
-
-    def __init__(self, service: "TrussService", request: Request):
-        self._service = service
-        self.request = request
-        self._result: Any = None
-        self._error: BaseException | None = None
-        self._done = False
-
-    def done(self) -> bool:
-        return self._done
-
-    def result(self) -> Any:
-        if not self._done:
-            # Poll only the owning request's bucket — other buckets' queued
-            # work stays queued for their own flush/poll.
-            self._service.resolve(self.request)
-        if not self._done:
-            raise RuntimeError(f"request {self.request.id} did not resolve")
-        if self._error is not None:
-            raise self._error
-        return self._result
-
-    @property
-    def stats(self) -> RequestStats:
-        return self.request.stats
-
-    def _resolve(self, result: Any) -> None:
-        self._result = result
-        self._done = True
-
-    def _fail(self, error: BaseException) -> None:
-        self._error = error
-        self._done = True
-
-
 class TrussService:
-    """Batched multi-graph K-truss serving over one compile cache."""
+    """Batched multi-graph K-truss serving over one compile cache.
+
+    Adapter over :class:`repro.api.Session`: ``mode``/``backend`` pin the
+    session to one registry backend (``fine`` formulation, the given
+    kernel, slot-aligned layout) so legacy behavior — one executable per
+    shape bucket — is preserved exactly.  Use ``repro.api`` directly for
+    the declarative surface (per-query backends, deadlines, the
+    imbalance-keyed auto rule).
+    """
 
     def __init__(
         self,
@@ -93,39 +50,55 @@ class TrussService:
         mesh=None,
         cache_dir: str | None = None,
     ):
-        if chunk & (chunk - 1):
-            raise ValueError(f"chunk={chunk} must be a power of two")
-        if cache_dir is not None:
-            # Persist compiled executables across processes (ROADMAP
-            # "compile-cache persistence"): a restarted server warm-starts
-            # its first compile per bucket from disk.
-            enable_persistent_cache(cache_dir)
         self.mode = mode
         self.backend = backend
-        self.chunk = int(chunk)
-        # None = the peel's provable iteration bound; an explicit cap that
-        # fires raises instead of returning truncated results.
-        self.max_iters = None if max_iters is None else int(max_iters)
-        self.mesh = mesh
-        if mesh is not None:
-            mesh_size = int(np.prod(list(dict(mesh.shape).values())))
-            if max_batch % mesh_size:
-                raise ValueError(
-                    f"max_batch={max_batch} must divide evenly over the "
-                    f"mesh's {mesh_size} devices (slots shard whole)"
-                )
-            mesh_key = (tuple(mesh.axis_names), tuple(dict(mesh.shape).values()))
-        else:
-            mesh_key = None
-        self._layout = ("aligned", mesh_key)
-        self.batcher = MicroBatcher(max_batch=max_batch, chunk=chunk)
-        self.cache = CompileCache(self._build_executor)
-        self._slot_ids: dict[int, Any] = {}  # bucket nnz_pad -> device array
-        self._futures: dict[int, TrussFuture] = {}
-        self.requests_served = 0
-        self.batches_run = 0
-        self.device_dispatches = 0
-        self.device_time_s = 0.0
+        self._session = Session(
+            backend=BackendKey("fine", backend, "aligned"),
+            mode=mode,
+            max_batch=max_batch,
+            chunk=chunk,
+            max_iters=max_iters,
+            mesh=mesh,
+            cache_dir=cache_dir,
+        )
+
+    # The api session's state, exposed under the legacy names ---------- #
+    @property
+    def session(self) -> Session:
+        """The underlying :class:`repro.api.Session`."""
+        return self._session
+
+    @property
+    def cache(self):
+        return self._session.cache
+
+    @property
+    def batcher(self):
+        return self._session.queue
+
+    @property
+    def chunk(self) -> int:
+        return self._session.chunk
+
+    @property
+    def mesh(self):
+        return self._session.mesh
+
+    @property
+    def requests_served(self) -> int:
+        return self._session.requests_served
+
+    @property
+    def batches_run(self) -> int:
+        return self._session.batches_run
+
+    @property
+    def device_dispatches(self) -> int:
+        return self._session.device_dispatches
+
+    @property
+    def device_time_s(self) -> float:
+        return self._session.device_time_s
 
     # ------------------------------------------------------------------ #
     # Submission
@@ -133,14 +106,7 @@ class TrussService:
     def submit(self, g: CSRGraph, workload: str = "ktruss", *, k: int = 3) -> TrussFuture:
         if workload not in ("ktruss", "kmax", "decompose"):
             raise ValueError(f"unknown workload {workload!r}")
-        if k < 3:
-            raise ValueError("k must be >= 3")
-        bucket = bucket_for(g, chunk=self.chunk)
-        req = Request(graph=g, workload=workload, k=int(k), bucket=bucket)
-        fut = TrussFuture(self, req)
-        self._futures[req.id] = fut
-        self.batcher.enqueue(req)
-        return fut
+        return self._session.submit(TrussQuery(graph=g, workload=workload, k=int(k)))
 
     def submit_ktruss(self, g: CSRGraph, k: int) -> TrussFuture:
         return self.submit(g, "ktruss", k=k)
@@ -160,207 +126,42 @@ class TrussService:
     ) -> TrussFuture:
         """Submit a frontier-bounded re-peel (the streaming update kernel).
 
-        ``frontier`` marks the member's edges that are free to peel;
-        the complement is frozen at ``frozen_truss`` (its maintained
-        trussness) and only contributes support while the threshold is
-        inside its truss.  The future resolves to the member's full
-        (nnz,) trussness — frontier lanes re-peeled, frozen lanes passed
-        through.  Rides the same bucket queue / micro-batcher / compile
-        cache as ordinary requests, so concurrent streams (and plain
-        decomposes) coalesce into shared dispatches.
+        Adapter for :meth:`repro.api.TrussQuery.stream_update` — see there
+        for semantics.  The future resolves to the member's full (nnz,)
+        trussness: frontier lanes re-peeled, frozen lanes passed through.
         """
-        frontier = np.asarray(frontier, bool)
-        frozen_truss = np.asarray(frozen_truss, np.int32)
-        if frontier.shape[0] != g.nnz or frozen_truss.shape[0] != g.nnz:
-            raise ValueError(
-                f"frontier/frozen_truss must cover all {g.nnz} edges"
+        return self._session.submit(
+            TrussQuery.stream_update(
+                g,
+                frontier=np.asarray(frontier, bool),
+                frozen_truss=np.asarray(frozen_truss, np.int32),
             )
-        bucket = bucket_for(g, chunk=self.chunk)
-        req = Request(
-            graph=g,
-            workload="stream",
-            k=3,
-            bucket=bucket,
-            alive0=frontier,
-            frozen_truss=frozen_truss,
         )
-        fut = TrussFuture(self, req)
-        self._futures[req.id] = fut
-        self.batcher.enqueue(req)
-        return fut
 
     def open_stream(self, g: CSRGraph, trussness: np.ndarray | None = None):
-        """Open a :class:`repro.stream.StreamingTrussSession` on this service.
-
-        Runs the initial full decompose through the ordinary batched path
-        unless ``trussness`` is supplied; subsequent ``update()`` batches
-        are frontier-bounded re-peels submitted via :meth:`submit_stream`.
-        """
-        from ..stream.session import StreamingTrussSession  # lazy: no cycle
-
-        return StreamingTrussSession(self, g, trussness=trussness)
+        """Open a :class:`repro.stream.StreamingTrussSession` on this service."""
+        return self._session.open_stream(g, trussness=trussness)
 
     # ------------------------------------------------------------------ #
     # Batch execution
     # ------------------------------------------------------------------ #
     def poll(self) -> int:
         """Run at most one micro-batch; returns how many requests resolved."""
-        batch = self.batcher.next_batch()
-        if not batch:
-            return 0
-        return self._run_batch(batch)
+        return self._session.poll()
 
     def flush(self) -> int:
         """Drain the queue; returns how many requests resolved."""
-        n = 0
-        while len(self.batcher):
-            n += self.poll()
-        return n
+        return self._session.flush()
 
-    def resolve(self, request: Request) -> None:
-        """Run batches from ``request``'s bucket until it resolves.
-
-        Unlike :meth:`flush` this never touches other buckets' queued
-        requests — a ``result()`` call on one future does not drain the
-        whole service.
-        """
-        while request.id in self._futures:
-            batch = self.batcher.next_batch(bucket=request.bucket)
-            if not batch:
-                raise RuntimeError(
-                    f"request {request.id} is unresolved but not queued"
-                )
-            self._run_batch(batch)
-
-    def _build_executor(self, key: tuple[Bucket, int, Any]):
-        bucket, _slots, _layout = key
-        return build_peel(
-            mode=self.mode,
-            backend=self.backend,
-            window=bucket.window,
-            chunk=self.chunk,
-            max_iters=self.max_iters,
-            mesh=self.mesh,
-        )
-
-    def _run_batch(self, batch: list[Request]) -> int:
-        bucket = batch[0].bucket
-        packed = self.batcher.pack(batch)
-        exe, hit = self.cache.get(bucket, self.batcher.max_batch, self._layout)
-        for req in batch:
-            req.stats.compile_hit = hit
-
-        slots = self.batcher.max_batch
-        slot_ids = self._slot_ids.get(bucket.nnz_pad)
-        if slot_ids is None:
-            import jax.numpy as jnp
-
-            slot_ids = self._slot_ids[bucket.nnz_pad] = jnp.asarray(
-                np.repeat(np.arange(slots, dtype=np.int32), bucket.nnz_pad)
-            )
-        k0 = np.full(slots, 3, np.int32)
-        single_level = np.zeros(slots, bool)
-        for i, req in enumerate(batch):
-            k0[i] = req.k
-            single_level[i] = req.workload == "ktruss"
-
-        # Streaming members peel only their affected frontier; the rest of
-        # their lanes are frozen at the session's maintained trussness.
-        # Ordinary members stay on the executor's defaults (fully alive,
-        # nothing frozen) — zeros here reproduce those defaults exactly.
-        alive0 = frozen = frozen_truss = None
-        if any(req.alive0 is not None for req in batch):
-            import jax.numpy as jnp
-
-            nnzp_total = slots * bucket.nnz_pad
-            alive_np = np.asarray(packed.problem.colidx) != 0
-            frozen_np = np.zeros(nnzp_total, bool)
-            ft_np = np.zeros(nnzp_total, np.int32)
-            for req, (a, b) in zip(batch, packed.edge_ranges):
-                if req.alive0 is None:
-                    continue
-                alive_np[a:b] = req.alive0
-                frozen_np[a:b] = ~req.alive0
-                ft_np[a:b] = req.frozen_truss
-            alive0 = jnp.asarray(alive_np)
-            frozen = jnp.asarray(frozen_np)
-            frozen_truss = jnp.asarray(ft_np)
-
-        t0 = time.perf_counter()
-        # peel() synchronizes internally (its iteration-cap check reads back
-        # the done flags), so dt covers the whole dispatch.  The batch was
-        # already dequeued, so if the dispatch fails its futures must carry
-        # the error — otherwise they are stranded unresolvable.
-        try:
-            st = exe.peel(
-                packed.problem,
-                slot_ids=slot_ids,
-                k0=k0,
-                single_level=single_level,
-                alive0=alive0,
-                frozen=frozen,
-                frozen_truss=frozen_truss,
-            )
-        except Exception as e:
-            for req in batch:
-                self._futures.pop(req.id)._fail(e)
-            raise
-        dt = time.perf_counter() - t0
-        self.device_time_s += dt
-        self.device_dispatches += 1
-
-        alive = np.asarray(st.alive)
-        support = np.asarray(st.support)
-        trussness = np.asarray(st.trussness)
-        kmax = np.asarray(st.kmax)
-        levels = np.asarray(st.levels)
-        iters = np.asarray(st.iters)
-
-        for i, (req, (a, b)) in enumerate(zip(batch, packed.edge_ranges)):
-            fut = self._futures.pop(req.id)
-            req.stats.device_time_s = dt  # the batch's single dispatch
-            req.stats.rounds = int(levels[i])
-            req.stats.iterations = int(iters[i])
-            if req.workload == "ktruss":
-                member_alive = alive[a:b].copy()
-                fut._resolve(
-                    KTrussResult(
-                        k=req.k,
-                        alive=member_alive,
-                        support=support[a:b].copy(),
-                        iterations=int(iters[i]),
-                        edges_remaining=int(member_alive.sum()),
-                    )
-                )
-            elif req.workload == "kmax":
-                fut._resolve(int(kmax[i]))
-            elif req.workload == "stream":
-                # Full member trussness: frontier lanes re-peeled, frozen
-                # lanes passed through by the peel (see exec.build_peel).
-                fut._resolve(trussness[a:b].copy())
-            else:
-                t = trussness[a:b].copy()
-                fut._resolve(
-                    TrussDecomposition(
-                        trussness=t,
-                        kmax=int(t.max(initial=0)) if t.size else 0,
-                        levels=int(levels[i]),
-                    )
-                )
-
-        self.batches_run += 1
-        self.requests_served += len(batch)
-        return len(batch)
+    def resolve(self, request) -> None:
+        """Run batches from ``request``'s group until it resolves (legacy
+        spelling of ``future.result()`` — which is the API to use)."""
+        fut = self._session._futures.get(request.id)
+        if fut is not None:
+            fut.result()
 
     # ------------------------------------------------------------------ #
     # Observability
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
-        return {
-            "requests_served": self.requests_served,
-            "batches_run": self.batches_run,
-            "device_dispatches": self.device_dispatches,
-            "pending": len(self.batcher),
-            "device_time_s": round(self.device_time_s, 6),
-            **{f"cache_{k}": v for k, v in self.cache.stats.row().items()},
-        }
+        return self._session.stats()

@@ -9,30 +9,39 @@ Layers (bottom-up):
                      drift bounds (±1 per unit update) plus per-triangle
                      level tests bound exactly which edges an update can
                      re-rank; everything else provably keeps its trussness.
+* :mod:`.tricache` — incremental triangle state: the union graph's
+                     triangle list cached as edge-key triples, maintained
+                     per update by enumerating only the wedges through
+                     inserted edges (one full enumeration per session).
 * :mod:`.session`  — :class:`StreamingTrussSession`: maintains the graph +
                      decomposition, freezes non-frontier edges at their
                      known trussness, and lowers each update onto ONE
-                     :class:`repro.exec.PeelExecutor` dispatch via the
-                     owning :class:`repro.service.TrussService` (so many
-                     sessions' updates coalesce like ordinary requests).
+                     :class:`repro.exec.PeelExecutor` dispatch as a
+                     ``stream_update`` query on the owning
+                     :class:`repro.api.Session` (so many sessions'
+                     updates coalesce like ordinary queries).
 
 Incremental results are bit-identical to from-scratch ``decompose()`` on
 the mutated graph (hypothesis-tested in ``tests/test_stream.py``).
 """
 
 from .delta import EdgeBatch, GraphDelta, apply_batch, edge_keys
-from .frontier import FrontierResult, compute_frontier, edge_triangles
+from .frontier import ENUM_COUNTS, FrontierResult, compute_frontier, edge_triangles
 from .session import PendingUpdate, StreamingTrussSession, StreamUpdateResult
+from .tricache import TriangleCache, triangles_incident
 
 __all__ = [
     "EdgeBatch",
     "GraphDelta",
     "apply_batch",
     "edge_keys",
+    "ENUM_COUNTS",
     "FrontierResult",
     "compute_frontier",
     "edge_triangles",
     "PendingUpdate",
     "StreamingTrussSession",
     "StreamUpdateResult",
+    "TriangleCache",
+    "triangles_incident",
 ]

@@ -44,7 +44,20 @@ import numpy as np
 from ..graphs.csr import CSRGraph
 from .delta import GraphDelta, edge_keys
 
-__all__ = ["FrontierResult", "edge_triangles", "compute_frontier"]
+__all__ = [
+    "ENUM_COUNTS",
+    "FrontierResult",
+    "edge_triangles",
+    "compute_frontier",
+    "union_graph",
+]
+
+# Enumeration observability: "full" counts whole-graph triangle
+# enumerations (the per-update cost this module had before the session's
+# TriangleCache), "incident" counts the cheap insert-wedge enumerations
+# the cache does instead (repro.stream.tricache).  stream_bench asserts
+# the cached path stays at one "full" per session.
+ENUM_COUNTS = {"full": 0, "incident": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +97,7 @@ def edge_triangles(g: CSRGraph, *, chunk: int = 8192) -> np.ndarray:
     numpy, since the frontier machinery is host-side control logic, not a
     device kernel.  Chunked so the (chunk, max_degree) window stays small.
     """
+    ENUM_COUNTS["full"] += 1
     nnz = g.nnz
     if nnz == 0:
         return np.zeros((0, 3), np.int64)
@@ -123,7 +137,7 @@ def edge_triangles(g: CSRGraph, *, chunk: int = 8192) -> np.ndarray:
     return np.concatenate(out, axis=0) if out else np.zeros((0, 3), np.int64)
 
 
-def _union_graph(delta: GraphDelta) -> tuple[CSRGraph, np.ndarray]:
+def union_graph(delta: GraphDelta) -> tuple[CSRGraph, np.ndarray]:
     """G_old ∪ inserts, with its sorted edge keys.
 
     The union holds every triangle of either snapshot: gained triangles
@@ -140,7 +154,12 @@ def _union_graph(delta: GraphDelta) -> tuple[CSRGraph, np.ndarray]:
 
 
 def compute_frontier(
-    trussness_old: np.ndarray, delta: GraphDelta, *, chunk: int = 8192
+    trussness_old: np.ndarray,
+    delta: GraphDelta,
+    *,
+    chunk: int = 8192,
+    tri_keys: np.ndarray | None = None,
+    union: tuple[CSRGraph, np.ndarray] | None = None,
 ) -> FrontierResult:
     """Conservative affected-edge closure of ``delta`` (see module doc).
 
@@ -148,6 +167,11 @@ def compute_frontier(
       trussness_old: (old_nnz,) trussness of every old edge (>= 2), e.g.
         from ``KTrussEngine.decompose()`` or the previous session state.
       delta: the applied batch (:func:`repro.stream.delta.apply_batch`).
+      tri_keys: optional precomputed union-graph triangle list as (T, 3)
+        edge-key triples (``repro.stream.tricache.TriangleCache``); when
+        given, the per-update full triangle enumeration is skipped.
+      union: optional prebuilt ``union_graph(delta)`` result, so callers
+        that already needed it (the triangle cache) don't rebuild it.
 
     Returns a :class:`FrontierResult` over the **new** graph's edges.
     Inserted edges are always in the frontier; an empty batch (or one
@@ -159,7 +183,7 @@ def compute_frontier(
         raise ValueError(
             f"trussness has {trussness_old.shape[0]} entries, graph has {g_old.nnz}"
         )
-    union, ukeys = _union_graph(delta)
+    union, ukeys = union if union is not None else union_graph(delta)
     nu = union.nnz
     old_keys, new_keys = edge_keys(g_old), edge_keys(g_new)
     nI, nD = delta.num_inserts, delta.num_deletes
@@ -174,7 +198,13 @@ def compute_frontier(
         pos = np.minimum(np.searchsorted(old_keys, ukeys), g_old.nnz - 1)
         t_old_u[is_old] = trussness_old[pos[is_old]]
 
-    tri = edge_triangles(union, chunk=chunk)
+    if tri_keys is None:
+        tri = edge_triangles(union, chunk=chunk)
+    elif tri_keys.size:
+        # Union triangles by construction, so every key resolves exactly.
+        tri = np.searchsorted(ukeys, np.asarray(tri_keys, np.int64))
+    else:
+        tri = np.zeros((0, 3), np.int64)
     num_tri = int(tri.shape[0])
 
     # Per-union-edge drift bounds (valid for BOTH snapshots' trussness).

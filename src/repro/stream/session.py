@@ -3,33 +3,39 @@
 A session owns one evolving graph and its current truss decomposition.
 Each :meth:`update` applies an :class:`~repro.stream.delta.EdgeBatch`,
 computes the affected-edge frontier (``repro.stream.frontier``), and —
-only if the frontier is non-empty — submits ONE frontier-bounded re-peel
-through the owning :class:`~repro.service.TrussService`: the frontier
-lanes start alive, every other edge is frozen at its maintained trussness
-(``repro.exec.build_peel``'s frozen lanes), so the update costs one device
-dispatch over the sub-problem instead of a full decompose.  Updates whose
-frontier is empty (e.g. deleting an edge in no triangle) cost zero
-dispatches.
+only if the frontier is non-empty — submits ONE frontier-bounded
+``stream_update`` :class:`repro.api.TrussQuery` through the owning
+:class:`repro.api.Session`: the frontier lanes start alive, every other
+edge is frozen at its maintained trussness (the exec layer's frozen
+lanes), so the update costs one device dispatch over the sub-problem
+instead of a full decompose.  Updates whose frontier is
+empty (e.g. deleting an edge in no triangle) cost zero dispatches.
 
 The maintained state is exact, not approximate: the frontier closure is a
 proven superset of every edge whose trussness can change, and the frozen
 re-peel restricted to it reproduces from-scratch ``decompose()``
 bit-for-bit (property-tested in ``tests/test_stream.py``).
 
-Sessions ride the service's bucket queue, micro-batcher and compile
-cache, so updates from many concurrent sessions — and ordinary
-ktruss/kmax/decompose requests — coalesce into shared dispatches.  Use
-the two-phase form for that::
+Two maintained-state optimizations keep the host-side cost per update
+sub-linear in the graph:
+
+* the union-graph **triangle list is cached** across updates
+  (:class:`repro.stream.tricache.TriangleCache`): only wedges through the
+  batch's inserted edges are enumerated, instead of re-enumerating every
+  triangle per update (``cache_triangles=False`` restores the old path);
+* deltas themselves are sorted-key merges (``repro.stream.delta``).
+
+Sessions ride the api session's queue, micro-batcher and compile cache,
+so updates from many concurrent sessions — and ordinary declarative
+queries — coalesce into shared dispatches.  Use the two-phase form for
+that::
 
     pend_a = session_a.submit_update(batch_a)   # enqueue only
     pend_b = session_b.submit_update(batch_b)
-    svc.flush()                                 # one packed dispatch
+    s.flush()                                   # one packed dispatch
     res_a, res_b = pend_a.result(), pend_b.result()
 
-``update()`` is submit + result in one call.  Session state (graph +
-trussness) is host numpy: the frozen state rides into the dispatch with
-the packed batch, and the CSR delta/frontier themselves are host-side
-work (moving them onto the device is the ROADMAP async-pipeline item).
+``update()`` is submit + result in one call.
 """
 
 from __future__ import annotations
@@ -41,10 +47,11 @@ import numpy as np
 
 from ..graphs.csr import CSRGraph
 from .delta import EdgeBatch, GraphDelta, apply_batch
-from .frontier import FrontierResult, compute_frontier
+from .frontier import FrontierResult, compute_frontier, union_graph
+from .tricache import TriangleCache
 
 if TYPE_CHECKING:  # pragma: no cover
-    from ..service.service import TrussFuture, TrussService
+    from ..api.session import Session, TrussFuture
 
 __all__ = ["StreamUpdateResult", "PendingUpdate", "StreamingTrussSession"]
 
@@ -66,9 +73,9 @@ class StreamUpdateResult:
 class PendingUpdate:
     """Deferred half of :meth:`StreamingTrussSession.submit_update`.
 
-    ``result()`` resolves the underlying service future (running the
-    session's bucket if needed), merges the re-peeled frontier with the
-    carried trussness, commits the session state, and returns the
+    ``result()`` resolves the underlying api future (running the
+    session's batch group if needed), merges the re-peeled frontier with
+    the carried trussness, commits the session state, and returns the
     :class:`StreamUpdateResult`.
     """
 
@@ -79,12 +86,14 @@ class PendingUpdate:
         frontier: FrontierResult,
         carry: np.ndarray,
         future: "TrussFuture | None",
+        union_tri_keys: np.ndarray | None = None,
     ):
         self._session = session
         self._delta = delta
         self._frontier = frontier
         self._carry = carry
         self._future = future
+        self._union_tri_keys = union_tri_keys
         self._result: StreamUpdateResult | None = None
 
     def done(self) -> bool:
@@ -96,37 +105,49 @@ class PendingUpdate:
         if self._result is None:
             t_new = self._carry if self._future is None else self._future.result()
             self._result = self._session._commit(
-                self._delta, self._frontier, np.asarray(t_new, np.int32)
+                self._delta,
+                self._frontier,
+                np.asarray(t_new, np.int32),
+                self._union_tri_keys,
             )
         return self._result
 
 
 class StreamingTrussSession:
-    """Incremental truss maintenance for one graph on a ``TrussService``.
+    """Incremental truss maintenance for one graph on a ``repro.api.Session``.
 
-    Construct via :meth:`TrussService.open_stream` (shared service —
-    concurrent sessions coalesce) or :meth:`for_graph` (private
-    single-slot service).  ``trussness`` seeds the session; omitted, the
-    initial full decompose runs through the service's batched path.
+    Construct via :meth:`repro.api.Session.open_stream` (shared session —
+    concurrent streams coalesce), the legacy ``TrussService.open_stream``
+    adapter, or :meth:`for_graph` (private single-slot session).
+    ``trussness`` seeds the state; omitted, the initial full decompose
+    runs through the session's batched path.
     """
 
     def __init__(
         self,
-        service: "TrussService",
+        session,
         graph: CSRGraph,
         *,
         trussness: np.ndarray | None = None,
+        cache_triangles: bool = True,
     ):
-        self.service = service
+        # Accept a repro.api.Session or anything wrapping one under
+        # ``.session`` (the legacy TrussService adapter).
+        self.api: "Session" = getattr(session, "session", session)
+        self.service = session  # legacy spelling; .stats() works on both
         self.graph = graph
         if trussness is None:
-            trussness = service.submit_decompose(graph).result().trussness
+            from ..api.query import TrussQuery  # lazy: no import cycle
+
+            trussness = self.api.submit(TrussQuery.decompose(graph)).result().trussness
         trussness = np.asarray(trussness, np.int32)
         if trussness.shape[0] != graph.nnz:
             raise ValueError(
                 f"trussness has {trussness.shape[0]} entries, graph has {graph.nnz}"
             )
         self.trussness = trussness
+        self.cache_triangles = bool(cache_triangles)
+        self._tri_cache: TriangleCache | None = None
         self._pending: PendingUpdate | None = None
         self.updates_applied = 0
         self.update_dispatches = 0
@@ -134,12 +155,12 @@ class StreamingTrussSession:
 
     # ------------------------------------------------------------------ #
     @classmethod
-    def for_graph(cls, graph: CSRGraph, **service_kwargs) -> "StreamingTrussSession":
-        """Standalone session over a private one-slot service."""
-        from ..service.service import TrussService
+    def for_graph(cls, graph: CSRGraph, **session_kwargs) -> "StreamingTrussSession":
+        """Standalone session over a private one-slot ``repro.api.Session``."""
+        from ..api.session import Session
 
-        service_kwargs.setdefault("max_batch", 1)
-        return cls(TrussService(**service_kwargs), graph)
+        session_kwargs.setdefault("max_batch", 1)
+        return cls(Session(**session_kwargs), graph)
 
     @property
     def kmax(self) -> int:
@@ -152,14 +173,26 @@ class StreamingTrussSession:
         The graph/trussness state commits when the handle resolves; one
         update may be in flight per session (deltas are relative to the
         committed graph), so concurrency comes from many sessions sharing
-        one service, not from pipelining a single session.
+        one api session, not from pipelining a single session.
         """
         if self._pending is not None and self._pending._result is None:
             raise RuntimeError(
                 "session already has an in-flight update; resolve it first"
             )
         delta = apply_batch(self.graph, batch, strict=strict)
-        fr = compute_frontier(self.trussness, delta)
+
+        # Incremental triangle state: reuse the cached list, enumerating
+        # only the wedges the batch's inserts touch.  The union graph is
+        # built once and shared between the cache and the frontier.
+        union_tri_keys = union_pair = None
+        if self.cache_triangles:
+            if self._tri_cache is None:
+                self._tri_cache = TriangleCache(self.graph)
+            union_pair = union_graph(delta)
+            union_tri_keys = self._tri_cache.union_triangles(delta, union=union_pair)
+        fr = compute_frontier(
+            self.trussness, delta, tri_keys=union_tri_keys, union=union_pair
+        )
         g_new = delta.new_graph
 
         # Trussness carried over from the committed state (inserted edges
@@ -170,12 +203,16 @@ class StreamingTrussSession:
 
         future = None
         if fr.size:
-            future = self.service.submit_stream(
-                g_new,
-                frontier=fr.frontier,
-                frozen_truss=np.where(fr.frontier, 0, carry).astype(np.int32),
+            from ..api.query import TrussQuery  # lazy: no import cycle
+
+            future = self.api.submit(
+                TrussQuery.stream_update(
+                    g_new,
+                    frontier=fr.frontier,
+                    frozen_truss=np.where(fr.frontier, 0, carry).astype(np.int32),
+                )
             )
-        self._pending = PendingUpdate(self, delta, fr, carry, future)
+        self._pending = PendingUpdate(self, delta, fr, carry, future, union_tri_keys)
         return self._pending
 
     def update(self, batch: EdgeBatch, *, strict: bool = True) -> StreamUpdateResult:
@@ -184,10 +221,16 @@ class StreamingTrussSession:
 
     # ------------------------------------------------------------------ #
     def _commit(
-        self, delta: GraphDelta, fr: FrontierResult, t_new: np.ndarray
+        self,
+        delta: GraphDelta,
+        fr: FrontierResult,
+        t_new: np.ndarray,
+        union_tri_keys: np.ndarray | None,
     ) -> StreamUpdateResult:
         self.graph = delta.new_graph
         self.trussness = t_new
+        if self._tri_cache is not None and union_tri_keys is not None:
+            self._tri_cache.commit(delta, union_tri_keys)
         self._pending = None
         self.updates_applied += 1
         dispatches = 1 if fr.size else 0
@@ -212,4 +255,7 @@ class StreamingTrussSession:
             "edges_repeeled": self.edges_repeeled,
             "edges": self.graph.nnz,
             "kmax": self.kmax,
+            "cached_triangles": (
+                self._tri_cache.num_triangles if self._tri_cache else 0
+            ),
         }

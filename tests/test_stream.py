@@ -263,3 +263,45 @@ def test_pack_capacity_errors_are_specific():
         pack_problems(
             [big, small], slot_n=64, slot_nnz=128, slots=2, chunk=64, layout="contig"
         )
+
+
+# ------------------------------------------------------------------ #
+# Satellite: incremental triangle cache — one full enumeration per
+# session, and the cached list always equals a from-scratch enumeration
+# ------------------------------------------------------------------ #
+def test_triangle_cache_incremental_matches_full():
+    from repro.stream import ENUM_COUNTS, edge_keys
+
+    g = erdos(40, 5.0, seed=2)
+    sess = StreamingTrussSession.for_graph(g, chunk=64)
+    rng = np.random.default_rng(3)
+    base_full = ENUM_COUNTS["full"]
+    snapshots = []
+    for _ in range(4):
+        sess.update(_random_batch(rng, sess.graph, 3, 2))
+        snapshots.append((sess.graph, sess._tri_cache.tri_keys.copy()))
+    # Four updates cost exactly ONE full enumeration (the cache seed);
+    # everything after is wedge-incremental.
+    assert ENUM_COUNTS["full"] == base_full + 1
+    assert ENUM_COUNTS["incident"] >= 1
+    for graph, cached in snapshots:
+        tri = edge_triangles(graph)  # oracle (counts as "full", after the assert)
+        want = (
+            edge_keys(graph)[tri] if tri.size else np.zeros((0, 3), np.int64)
+        )
+        assert np.array_equal(
+            np.unique(cached, axis=0), np.unique(want, axis=0)
+        )
+
+
+def test_triangle_cache_off_still_exact():
+    from repro.api import Session
+
+    g = clustered(3, 12, 0.7, seed=1)
+    sess = StreamingTrussSession(
+        Session(max_batch=1, chunk=64), g, cache_triangles=False
+    )
+    rng = np.random.default_rng(5)
+    res = sess.update(_random_batch(rng, g, 2, 2))
+    assert sess._tri_cache is None
+    assert np.array_equal(res.trussness, trussness_numpy(sess.graph))
