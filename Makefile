@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-peel bench-stream bench-api lint
+.PHONY: test bench-smoke bench-peel bench-stream bench-api bench-obs lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -28,6 +28,14 @@ bench-stream:
 # one-dispatch contract and that both formulations are exercised).
 bench-api:
 	$(PYTHON) -m benchmarks.api_bench --smoke --out BENCH_api.json
+
+# Observability benchmark -> BENCH_obs.json (tracing overhead on/off +
+# per-(bucket, backend) observed imbalance) and a sample Chrome trace
+# (BENCH_trace_sample.json); smoke asserts the overhead bound and that
+# every query-path stage shows up as a span.
+bench-obs:
+	$(PYTHON) -m benchmarks.obs_bench --smoke --out BENCH_obs.json \
+		--trace-out BENCH_trace_sample.json
 
 # Byte-compile gate (no extra tooling required) + ruff when available
 # (CI installs it via requirements-dev.txt; bare containers skip it).

@@ -11,6 +11,7 @@ tables.  Sections:
   peel      — on-device peel: decompose graphs/s, sharded vs unsharded
   stream    — incremental truss maintenance: updates/s + frontier ratio
   api       — repro.api planner overhead + backend auto-choice per bucket
+  obs       — tracing overhead on/off + observed per-bucket imbalance
 """
 
 from __future__ import annotations
@@ -102,6 +103,12 @@ def main() -> None:
         from . import api_bench
 
         api_bench.report(api_bench.run_api_bench())
+
+    if only in (None, "obs"):
+        _section("obs (tracing overhead + observed imbalance)")
+        from . import obs_bench
+
+        obs_bench.report(obs_bench.run_obs_bench(repeats=2))
 
     print(f"\n# total bench wall time: {time.time()-t_start:.1f}s")
 

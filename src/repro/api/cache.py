@@ -22,18 +22,19 @@ the registry backend key, dataflow mode, and mesh placement.
 
 from __future__ import annotations
 
-import dataclasses
 import threading
 from typing import Callable, Hashable, NamedTuple
 
 import numpy as np
 
 from ..graphs.csr import CSRGraph
+from ..obs import MetricsRegistry
 
 __all__ = [
     "Bucket",
     "bucket_for",
     "build_peel",
+    "CacheStats",
     "CompileCache",
     "enable_persistent_cache",
 ]
@@ -123,10 +124,35 @@ def build_peel(
     )
 
 
-@dataclasses.dataclass
 class CacheStats:
-    compiles: int = 0
-    hits: int = 0
+    """Compile-cache hit/miss counters — a view over the metrics registry.
+
+    The counters live in a :class:`repro.obs.MetricsRegistry`
+    (``cache_compiles`` / ``cache_hits``), so they show up in
+    ``obs.metrics_snapshot()`` and the Prometheus exposition alongside
+    every other instrument; ``compiles`` / ``hits`` / ``hit_rate`` keep
+    their historical read surface, and :meth:`snapshot` (alias
+    :meth:`row`) keeps the historical key set.
+    """
+
+    def __init__(self, metrics: "MetricsRegistry | None" = None):
+        if metrics is None:
+            metrics = MetricsRegistry()  # standalone cache: private series
+        self.metrics = metrics
+
+    def record_compile(self) -> None:
+        self.metrics.inc("cache_compiles")
+
+    def record_hit(self) -> None:
+        self.metrics.inc("cache_hits")
+
+    @property
+    def compiles(self) -> int:
+        return int(self.metrics.value("cache_compiles"))
+
+    @property
+    def hits(self) -> int:
+        return int(self.metrics.value("cache_hits"))
 
     @property
     def requests(self) -> int:
@@ -143,6 +169,9 @@ class CacheStats:
             "hit_rate": round(self.hit_rate, 4),
         }
 
+    # The key-locked export name (tests/test_obs.py snapshots this).
+    snapshot = row
+
 
 class CompileCache:
     """Executor store keyed by ``(bucket, slots, variant)`` with hit/miss
@@ -153,14 +182,20 @@ class CompileCache:
     bucket-canonical one), so ``compiles`` counts actual XLA compilations,
     not just builder calls.  ``variant`` folds in whatever else
     specializes the program — the backend key, dataflow mode, and mesh
-    placement.
+    placement.  ``metrics`` routes the hit/miss counters into the owning
+    session's registry (default: a private one).
     """
 
-    def __init__(self, builder: Callable[[tuple[Bucket, int, Hashable]], Callable]):
+    def __init__(
+        self,
+        builder: Callable[[tuple[Bucket, int, Hashable]], Callable],
+        *,
+        metrics: "MetricsRegistry | None" = None,
+    ):
         self._builder = builder
         self._exes: dict[tuple[Bucket, int, Hashable], Callable] = {}
         self._lock = threading.Lock()
-        self.stats = CacheStats()
+        self.stats = CacheStats(metrics)
 
     def get(
         self, bucket: Bucket, slots: int, variant: Hashable = "contig"
@@ -170,9 +205,9 @@ class CompileCache:
         with self._lock:
             exe = self._exes.get(key)
             if exe is not None:
-                self.stats.hits += 1
+                self.stats.record_hit()
                 return exe, True
-            self.stats.compiles += 1
+            self.stats.record_compile()
             exe = self._exes[key] = self._builder(key)
             return exe, False
 

@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from typing import Any, Optional
 
 import numpy as np
@@ -35,6 +34,8 @@ import numpy as np
 from ..core.truss import KTrussResult, TrussDecomposition
 from ..graphs.pack import pack_problems
 from ..graphs.stats import imbalance_stats
+from ..obs import current_tracer, record_peel_batch
+from ..obs import clock as obs_clock
 from .cache import Bucket, CompileCache, bucket_for
 from .query import TrussQuery
 from .registry import BackendKey, choose_backend, default_kernel, get_backend
@@ -67,7 +68,7 @@ class QueryState:
     query: TrussQuery
     bucket: Bucket
     backend: BackendKey
-    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    submitted_at: float = dataclasses.field(default_factory=obs_clock.now)
     id: int = dataclasses.field(default_factory=lambda: next(_ids))
     stats: RequestStats = dataclasses.field(default_factory=RequestStats)
 
@@ -75,6 +76,12 @@ class QueryState:
     def group(self) -> tuple[Bucket, BackendKey]:
         """Batchable-together key: same bucket AND same backend."""
         return (self.bucket, self.backend)
+
+    def time_remaining(self) -> float | None:
+        """Seconds left of this query's deadline budget (``None`` = no
+        deadline).  The ONE place deadline arithmetic happens — on the
+        observability clock, so tests can fake time instead of sleeping."""
+        return obs_clock.remaining(self.submitted_at, self.query.deadline_s)
 
     # Legacy aliases (the old service Request shape) ------------------- #
     @property
@@ -179,31 +186,35 @@ class Planner:
     # ------------------------------------------------------------------ #
     def assign(self, query: TrussQuery) -> QueryState:
         """Canonicalize one query: shape bucket + registry backend."""
-        t0 = time.perf_counter()
-        bucket = bucket_for(query.graph, chunk=self.chunk)
-        if query.placement == "sharded" and self.mesh is None:
-            raise ValueError("placement='sharded' needs a session mesh")
-        if query.placement == "replicated" and self.mesh is not None:
-            raise ValueError(
-                "placement='replicated' conflicts with the session mesh "
-                "(placement is per-session; open a mesh-less session)"
-            )
-        key = query.backend if query.backend is not None else self.backend
-        if key is None:
-            key = choose_backend(
-                imbalance_stats(query.graph), kernel=self.kernel, layout=self.layout
-            )
-        else:
-            key = get_backend(key).key
-        if self.mesh is not None and key.layout != "aligned":
-            # The aligned layout is what makes slot boundaries shard
-            # boundaries; a contig backend on a mesh would split member
-            # graphs across devices.
-            raise ValueError(
-                f"backend {key} has layout={key.layout!r}, but mesh "
-                "sharding needs layout='aligned'"
-            )
-        dt = time.perf_counter() - t0
+        t0 = obs_clock.now()
+        with current_tracer().span("plan", workload=query.workload) as span:
+            bucket = bucket_for(query.graph, chunk=self.chunk)
+            if query.placement == "sharded" and self.mesh is None:
+                raise ValueError("placement='sharded' needs a session mesh")
+            if query.placement == "replicated" and self.mesh is not None:
+                raise ValueError(
+                    "placement='replicated' conflicts with the session mesh "
+                    "(placement is per-session; open a mesh-less session)"
+                )
+            key = query.backend if query.backend is not None else self.backend
+            if key is None:
+                key = choose_backend(
+                    imbalance_stats(query.graph),
+                    kernel=self.kernel,
+                    layout=self.layout,
+                )
+            else:
+                key = get_backend(key).key
+            if self.mesh is not None and key.layout != "aligned":
+                # The aligned layout is what makes slot boundaries shard
+                # boundaries; a contig backend on a mesh would split member
+                # graphs across devices.
+                raise ValueError(
+                    f"backend {key} has layout={key.layout!r}, but mesh "
+                    "sharding needs layout='aligned'"
+                )
+            span.attrs["backend"] = str(key)
+        dt = obs_clock.now() - t0
         self.queries_planned += 1
         self.plan_time_s += dt
         self.backend_choices[(bucket, key)] = (
@@ -218,7 +229,7 @@ class Planner:
     def plan(self, states: list[QueryState]) -> Plan:
         """Group assigned queries into dispatchable batches (FIFO within a
         ``(bucket, backend)`` group, at most ``max_batch`` members each)."""
-        t0 = time.perf_counter()
+        t0 = obs_clock.now()
         batches: list[PlannedBatch] = []
         by_group: dict[tuple, list[QueryState]] = {}
         order: list[tuple] = []
@@ -239,7 +250,7 @@ class Planner:
                         slots=self.max_batch,
                     )
                 )
-        dt = time.perf_counter() - t0
+        dt = obs_clock.now() - t0
         self.plan_time_s += dt  # batching is planning work too
         return Plan(batches=batches, plan_time_s=dt)
 
@@ -293,17 +304,23 @@ class Planner:
         the member's full ``(nnz,)`` trussness (stream_update).
         """
         bucket, backend, queries = batch.bucket, batch.backend, batch.queries
-        t0 = time.perf_counter()
-        packed = pack_problems(
-            [st.query.graph for st in queries],
-            slot_n=bucket.n_pad,
-            slot_nnz=bucket.nnz_pad,
-            slots=batch.slots,
-            chunk=self.chunk,
-            layout=backend.layout,
-        )
-        pack_dt = time.perf_counter() - t0
-        exe, hit = cache.get(bucket, batch.slots, self.cache_variant(backend))
+        tracer = current_tracer()
+        t0 = obs_clock.now()
+        with tracer.span(
+            "pack", members=len(queries), slots=batch.slots, layout=backend.layout
+        ):
+            packed = pack_problems(
+                [st.query.graph for st in queries],
+                slot_n=bucket.n_pad,
+                slot_nnz=bucket.nnz_pad,
+                slots=batch.slots,
+                chunk=self.chunk,
+                layout=backend.layout,
+            )
+        pack_dt = obs_clock.now() - t0
+        with tracer.span("compile", backend=str(backend)) as span:
+            exe, hit = cache.get(bucket, batch.slots, self.cache_variant(backend))
+            span.attrs["hit"] = hit
         for st in queries:
             st.stats.pack_time_s = pack_dt
             st.stats.compile_hit = hit
@@ -338,7 +355,7 @@ class Planner:
 
         # peel() synchronizes internally (its iteration-cap check reads back
         # the done flags), so dt covers the whole dispatch.
-        t0 = time.perf_counter()
+        t0 = obs_clock.now()
         st_dev = exe.peel(
             packed.problem,
             slot_ids=slot_ids,
@@ -348,47 +365,62 @@ class Planner:
             frozen=frozen,
             frozen_truss=frozen_truss,
         )
-        dt = time.perf_counter() - t0
+        dt = obs_clock.now() - t0
 
-        alive = np.asarray(st_dev.alive)
-        support = np.asarray(st_dev.support)
-        trussness = np.asarray(st_dev.trussness)
-        kmax = np.asarray(st_dev.kmax)
-        levels = np.asarray(st_dev.levels)
-        iters = np.asarray(st_dev.iters)
+        with tracer.span("unpack", members=len(queries)):
+            alive = np.asarray(st_dev.alive)
+            support = np.asarray(st_dev.support)
+            trussness = np.asarray(st_dev.trussness)
+            kmax = np.asarray(st_dev.kmax)
+            levels = np.asarray(st_dev.levels)
+            iters = np.asarray(st_dev.iters)
+            edges_alive = np.asarray(st_dev.edges_alive)
 
-        results: list[Any] = []
-        for i, (st, (a, b)) in enumerate(zip(queries, packed.edge_ranges)):
-            st.stats.device_time_s = dt  # the batch's single dispatch
-            st.stats.rounds = int(levels[i])
-            st.stats.iterations = int(iters[i])
-            workload = st.query.workload
-            if workload == "ktruss":
-                member_alive = alive[a:b].copy()
-                results.append(
-                    KTrussResult(
-                        k=st.query.k,
-                        alive=member_alive,
-                        support=support[a:b].copy(),
-                        iterations=int(iters[i]),
-                        edges_remaining=int(member_alive.sum()),
+            results: list[Any] = []
+            for i, (st, (a, b)) in enumerate(zip(queries, packed.edge_ranges)):
+                st.stats.device_time_s = dt  # the batch's single dispatch
+                st.stats.rounds = int(levels[i])
+                st.stats.iterations = int(iters[i])
+                workload = st.query.workload
+                if workload == "ktruss":
+                    member_alive = alive[a:b].copy()
+                    results.append(
+                        KTrussResult(
+                            k=st.query.k,
+                            alive=member_alive,
+                            support=support[a:b].copy(),
+                            iterations=int(iters[i]),
+                            edges_remaining=int(member_alive.sum()),
+                        )
                     )
-                )
-            elif workload == "kmax":
-                results.append(int(kmax[i]))
-            elif workload == "stream_update":
-                # Full member trussness: frontier lanes re-peeled, frozen
-                # lanes passed through by the peel (see exec.build_peel).
-                results.append(trussness[a:b].copy())
-            else:
-                t = trussness[a:b].copy()
-                results.append(
-                    TrussDecomposition(
-                        trussness=t,
-                        kmax=int(t.max(initial=0)) if t.size else 0,
-                        levels=int(levels[i]),
+                elif workload == "kmax":
+                    results.append(int(kmax[i]))
+                elif workload == "stream_update":
+                    # Full member trussness: frontier lanes re-peeled, frozen
+                    # lanes passed through by the peel (see exec.build_peel).
+                    results.append(trussness[a:b].copy())
+                else:
+                    t = trussness[a:b].copy()
+                    results.append(
+                        TrussDecomposition(
+                            trussness=t,
+                            kmax=int(t.max(initial=0)) if t.size else 0,
+                            levels=int(levels[i]),
+                        )
                     )
-                )
+
+        # The paper's load-imbalance statistic, observed at runtime: the
+        # per-slot iteration spread of THIS dispatch, recorded per
+        # (bucket, backend) so the auto rule can be calibrated from data.
+        record_peel_batch(
+            bucket=bucket,
+            backend=backend,
+            levels=levels,
+            iters=iters,
+            edges_alive=edges_alive,
+            batch_size=len(queries),
+            device_time_s=dt,
+        )
         return results
 
     # ------------------------------------------------------------------ #

@@ -14,13 +14,14 @@ module now; the lowering itself lives in :class:`repro.api.Planner`.
 
 from __future__ import annotations
 
-import time
 from collections import deque
 from typing import Any
 
 import numpy as np
 
 from ..graphs.csr import CSRGraph
+from ..obs import MetricsRegistry, Observability
+from ..obs import clock as obs_clock
 from .cache import CompileCache, bucket_for, enable_persistent_cache
 from .errors import TrussTimeoutError
 from .planner import PlannedBatch, Planner, QueryState
@@ -82,7 +83,7 @@ class QueryQueue:
             else:
                 keep.append(st)
         self._pending = keep
-        now = time.perf_counter()
+        now = obs_clock.now()
         for st in batch:
             st.stats.queue_time_s = now - st.submitted_at
             st.stats.batch_size = len(batch)
@@ -122,22 +123,19 @@ class TrussFuture:
         ``timeout`` bounds the time spent driving the queue (checked
         between batch dispatches — one in-flight dispatch is never
         interrupted); ``timeout=0`` is non-blocking.  Left unset it
-        defaults to the query's remaining ``deadline_s`` budget (if any);
-        an explicit ``timeout=None`` waits until resolved.  On expiry
-        raises :class:`TrussTimeoutError` carrying the bucket and the
-        queue depth at expiry.
+        defaults to the query's remaining ``deadline_s`` budget (if any)
+        — :meth:`QueryState.time_remaining`, the one deadline rule on the
+        observability clock; an explicit ``timeout=None`` waits until
+        resolved.  On expiry raises :class:`TrussTimeoutError` carrying
+        the bucket and the queue depth at expiry.
         """
         if timeout is _UNSET:
-            d = self._state.query.deadline_s
-            if d is None:
-                timeout = None
-            else:
-                elapsed = time.perf_counter() - self._state.submitted_at
-                timeout = max(0.0, d - elapsed)
-        t0 = time.perf_counter()
+            timeout = self._state.time_remaining()
+        t0 = obs_clock.now()
         while not self._done:
-            waited = time.perf_counter() - t0
+            waited = obs_clock.now() - t0
             if timeout is not None and waited >= timeout:
+                self._session._record_deadline_miss(self._state, waited)
                 raise TrussTimeoutError(
                     f"query {self._state.id} ({self._state.query.workload}) "
                     f"unresolved after {waited:.3f}s (timeout={timeout}s); "
@@ -184,6 +182,14 @@ class Session:
       mesh: shard packed slot blocks across devices
         (``repro.distributed.slot_mesh``); forces the aligned layout.
       cache_dir: persist compiled executables across processes.
+      trace: span tracing — ``True`` records in memory, a path string
+        records AND auto-exports Chrome trace JSON there after
+        ``solve()``/``flush()``; ``None`` (default) consults the
+        ``REPRO_TRACE=path`` env var; ``False`` forces off (a shared
+        no-op tracer: near-zero overhead).
+      metrics: route this session's metrics into an existing
+        :class:`repro.obs.MetricsRegistry` (default: a private registry
+        chained to the process-global one).
     """
 
     def __init__(
@@ -198,6 +204,8 @@ class Session:
         max_iters: int | None = None,
         mesh=None,
         cache_dir: str | None = None,
+        trace: bool | str | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         if cache_dir is not None:
             enable_persistent_cache(cache_dir)
@@ -208,6 +216,7 @@ class Session:
                     f"max_batch={max_batch} must divide evenly over the "
                     f"mesh's {mesh_size} devices (slots shard whole)"
                 )
+        self.obs = Observability(trace=trace, metrics=metrics)
         self.planner = Planner(
             max_batch=max_batch,
             chunk=chunk,
@@ -218,13 +227,11 @@ class Session:
             max_iters=max_iters,
             mesh=mesh,
         )
-        self.cache = CompileCache(self.planner.build_executor)
+        self.cache = CompileCache(
+            self.planner.build_executor, metrics=self.obs.metrics
+        )
         self.queue = QueryQueue(max_batch=max_batch)
         self._futures: dict[int, TrussFuture] = {}
-        self.requests_served = 0
-        self.batches_run = 0
-        self.device_dispatches = 0
-        self.device_time_s = 0.0
 
     # Convenience mirrors of the planner's config ----------------------- #
     @property
@@ -239,15 +246,38 @@ class Session:
     def mesh(self):
         return self.planner.mesh
 
+    # Serving counters — views over the session's metrics registry ------ #
+    @property
+    def requests_served(self) -> int:
+        return int(self.obs.metrics.value("requests_served"))
+
+    @property
+    def batches_run(self) -> int:
+        return int(self.obs.metrics.value("batches_run"))
+
+    @property
+    def device_dispatches(self) -> int:
+        return int(self.obs.metrics.value("dispatches"))
+
+    @property
+    def device_time_s(self) -> float:
+        return self.obs.metrics.value("device_seconds_total")
+
+    @property
+    def deadline_misses(self) -> int:
+        return int(self.obs.metrics.value("deadline_misses"))
+
     # ------------------------------------------------------------------ #
     # Submission
     # ------------------------------------------------------------------ #
     def submit(self, query: TrussQuery) -> TrussFuture:
         """Assign (bucket + backend) and enqueue one declarative query."""
-        state = self.planner.assign(query)
+        with self.obs.activate():
+            state = self.planner.assign(query)
         fut = TrussFuture(self, state)
         self._futures[state.id] = fut
         self.queue.enqueue(state)
+        self.obs.metrics.set_gauge("queue_depth", len(self.queue))
         return fut
 
     def solve(self, queries) -> list[Any]:
@@ -259,16 +289,20 @@ class Session:
         batches from the queue instead, which is what makes it
         deadline-aware; ``solve()`` waits for everything anyway.)
         """
-        futs = [self.submit(q) for q in queries]
-        states = self.queue.drain()
-        now = time.perf_counter()
-        plan = self.planner.plan(states)
-        for batch in plan.batches:
-            for st in batch.queries:
-                st.stats.queue_time_s = now - st.submitted_at
-                st.stats.batch_size = len(batch.queries)
-            self._run_batch(batch)
-        return [f.result() for f in futs]
+        queries = list(queries)
+        with self.obs.activate(), self.obs.tracer.span("solve", queries=len(queries)):
+            futs = [self.submit(q) for q in queries]
+            states = self.queue.drain()
+            now = obs_clock.now()
+            plan = self.planner.plan(states)
+            for batch in plan.batches:
+                for st in batch.queries:
+                    st.stats.queue_time_s = now - st.submitted_at
+                    st.stats.batch_size = len(batch.queries)
+                self._run_batch(batch)
+            results = [f.result() for f in futs]
+        self.obs.export_trace()  # no-op unless a trace path is configured
+        return results
 
     def open_stream(
         self,
@@ -322,6 +356,7 @@ class Session:
         n = 0
         while len(self.queue):
             n += self.poll()
+        self.obs.export_trace()  # no-op unless a trace path is configured
         return n
 
     def _planned(self, batch: list[QueryState]) -> PlannedBatch:
@@ -339,34 +374,66 @@ class Session:
         # futures must carry the error — otherwise they are stranded
         # unresolvable.
         try:
-            results = self.planner.execute(planned, self.cache)
+            with self.obs.activate():
+                results = self.planner.execute(planned, self.cache)
         except Exception as e:
             for st in batch:
                 self._futures.pop(st.id)._fail(e)
             raise
         # execute() stamps the dispatch's own duration on every member;
         # host-side packing is accounted separately (stats.pack_time_s).
-        self.device_time_s += batch[0].stats.device_time_s
-        self.device_dispatches += 1
-        self.batches_run += 1
+        m = self.obs.metrics
+        m.inc("device_seconds_total", batch[0].stats.device_time_s)
+        m.inc("dispatches")
+        m.inc("batches_run")
+        m.inc("requests_served", len(batch))
+        m.observe(
+            "batch_occupancy",
+            len(batch) / planned.slots,
+            buckets=(0.125, 0.25, 0.5, 0.75, 1.0),
+        )
+        m.set_gauge("queue_depth", len(self.queue))
         for st, res in zip(batch, results):
             self._futures.pop(st.id)._resolve(res)
-        self.requests_served += len(batch)
         return len(batch)
+
+    def _record_deadline_miss(self, state: QueryState, waited_s: float) -> None:
+        self.obs.metrics.inc("deadline_misses")
+        self.obs.tracer.instant(
+            "deadline-miss",
+            query=state.id,
+            workload=state.query.workload,
+            waited_s=round(waited_s, 6),
+        )
 
     # ------------------------------------------------------------------ #
     # Observability
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
+        """Serving counters — a view over ``self.obs.metrics`` (the keys
+        are locked by ``tests/test_obs.py``; extend, don't rename)."""
         return {
             "requests_served": self.requests_served,
             "batches_run": self.batches_run,
             "device_dispatches": self.device_dispatches,
+            "deadline_misses": self.deadline_misses,
             "pending": len(self.queue),
             "device_time_s": round(self.device_time_s, 6),
             **{f"cache_{k}": v for k, v in self.cache.stats.row().items()},
             **{f"planner_{k}": v for k, v in self.planner.stats().items()},
         }
+
+    def metrics_snapshot(self) -> dict:
+        """JSON snapshot of this session's metrics registry."""
+        return self.obs.metrics_snapshot()
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of this session's metrics."""
+        return self.obs.prometheus_text()
+
+    def export_trace(self, path: str | None = None) -> str | None:
+        """Write the session's Chrome trace JSON (see ``Session(trace=)``)."""
+        return self.obs.export_trace(path)
 
 
 def solve(queries, **session_kwargs) -> Any:
@@ -374,8 +441,10 @@ def solve(queries, **session_kwargs) -> Any:
 
     ``queries`` is a :class:`TrussQuery` or an iterable of them; results
     come back in submission order (a lone query returns its lone result).
-    Session knobs (``backend=``, ``mesh=``, ``max_batch=``, ...) pass
-    through — see :class:`Session`.
+    Session knobs (``backend=``, ``mesh=``, ``max_batch=``,
+    ``trace="trace.json"``, ...) pass through — see :class:`Session`;
+    with a ``trace`` path the Chrome trace JSON is written before
+    returning.
     """
     single = isinstance(queries, TrussQuery)
     qs = [queries] if single else list(queries)

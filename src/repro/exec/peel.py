@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core.eager_coarse import support_coarse_eager
 from ..core.eager_fine import FineProblem, support_fine_eager, support_fine_owner
+from ..obs import current_registry, current_tracer
 
 __all__ = ["PeelState", "make_problem_support", "build_peel", "PeelExecutor"]
 
@@ -55,6 +56,7 @@ class PeelState(NamedTuple):
     iters: jax.Array  # (S,) int32 — prune iterations while the slot was live
     done: jax.Array  # (S,) bool
     total_iters: jax.Array  # () int32 — while-loop trips (the cap's subject)
+    edges_alive: jax.Array  # (S,) int32 — alive edges at the last converged level
 
 
 def make_problem_support(
@@ -171,6 +173,7 @@ def build_peel(
             iters=jnp.zeros(num_slots, jnp.int32),
             done=edges0 == 0,
             total_iters=jnp.int32(0),
+            edges_alive=edges0,
         )
 
         def cond(st: PeelState):
@@ -214,6 +217,11 @@ def build_peel(
                 iters=st.iters + (~st.done).astype(jnp.int32),
                 done=st.done | retired,
                 total_iters=st.total_iters + 1,
+                # Live slots track their current level's alive-edge count;
+                # a retired slot freezes at its final level — free per-slot
+                # telemetry for the runtime imbalance histograms
+                # (repro.obs.peel_stats).
+                edges_alive=jnp.where(st.done, st.edges_alive, left),
             )
 
         return jax.lax.while_loop(cond, body, state)
@@ -304,11 +312,21 @@ class PeelExecutor:
                 )
             )
         self.dispatches += 1
-        st = self._peel(p, slot_ids, k0, single_level, alive0, frozen, frozen_truss)
+        current_registry().inc("peel_dispatches")
+        tracer = current_tracer()
+        # "dispatch" is the (async) launch of the compiled peel — on a
+        # first call per executor it includes the XLA compile; the
+        # blocking readback below is the true device wait.
+        with tracer.span("dispatch", slots=num_slots):
+            st = self._peel(
+                p, slot_ids, k0, single_level, alive0, frozen, frozen_truss
+            )
         # Belt: the iteration cap is provably unreachable (see build_peel),
         # so an un-done slot means a peel bug — fail loudly rather than
         # letting callers read back a truncated state as final.
-        if not bool(np.asarray(st.done).all()):
+        with tracer.span("device-wait"):
+            all_done = bool(np.asarray(st.done).all())
+        if not all_done:
             raise RuntimeError(
                 f"peel hit the iteration cap after {int(st.total_iters)} "
                 f"trips with slots unfinished: done={np.asarray(st.done)}"

@@ -8,16 +8,19 @@
 
     * :class:`TrussService` — thin adapter over ``repro.api.Session``
       (pinned to one registry backend, exactly the old behavior);
-    * ``TrussFuture`` — re-export of :class:`repro.api.TrussFuture`;
-    * ``Bucket`` / ``bucket_for`` / ``CompileCache`` /
-      ``enable_persistent_cache`` / ``build_peel`` — re-exports of
-      :mod:`repro.api.cache`;
-    * ``Request`` / ``RequestStats`` / ``MicroBatcher`` — re-exports of
-      the api queue types.
+    * ``TrussFuture`` — re-export of :class:`repro.api.TrussFuture`.
+
+    The cache and batcher spellings (``Bucket``, ``bucket_for``,
+    ``CompileCache``, ``build_peel``, ``enable_persistent_cache``,
+    ``Request``, ``RequestStats``, ``MicroBatcher``) still resolve but
+    are no longer part of the documented surface; importing the
+    ``repro.service.cache`` / ``repro.service.batcher`` shims raises a
+    :class:`DeprecationWarning`.  Import from :mod:`repro.api` instead.
 """
 
-from .batcher import MicroBatcher, Request, RequestStats
-from .cache import (
+# Cache names resolve straight from repro.api so the common legacy
+# imports (``from repro.service import bucket_for``) stay warning-free.
+from ..api.cache import (  # noqa: F401 — legacy re-exports
     Bucket,
     CompileCache,
     bucket_for,
@@ -27,14 +30,18 @@ from .cache import (
 from .service import TrussFuture, TrussService
 
 __all__ = [
-    "MicroBatcher",
-    "Request",
-    "RequestStats",
-    "Bucket",
-    "CompileCache",
-    "bucket_for",
-    "build_peel",
-    "enable_persistent_cache",
     "TrussFuture",
     "TrussService",
 ]
+
+_BATCHER_NAMES = ("MicroBatcher", "Request", "RequestStats")
+
+
+def __getattr__(name: str):
+    # Batcher names import lazily through the deprecated shim so merely
+    # importing ``repro.service`` doesn't warn, but touching them does.
+    if name in _BATCHER_NAMES:
+        from . import batcher
+
+        return getattr(batcher, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

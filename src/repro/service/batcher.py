@@ -7,14 +7,24 @@ read accessors ``.graph``/``.workload``/``.k`` still work),
 ``MicroBatcher`` keeps its old keyword surface below, and the
 block-diagonal packing itself lives in :class:`repro.api.Planner`.
 Importable for one release; new code should use ``repro.api``.
+Importing this module raises a :class:`DeprecationWarning`.
 """
 
 from __future__ import annotations
 
-from ..api.cache import Bucket
-from ..api.planner import QueryState as Request  # noqa: F401 — re-export
-from ..api.planner import RequestStats  # noqa: F401 — re-export
-from ..api.session import QueryQueue
+import warnings
+
+warnings.warn(
+    "repro.service.batcher is deprecated; import from repro.api instead "
+    "(QueryState/RequestStats/QueryQueue in repro.api.planner/session)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from ..api.cache import Bucket  # noqa: E402
+from ..api.planner import QueryState as Request  # noqa: E402, F401 — re-export
+from ..api.planner import RequestStats  # noqa: E402, F401 — re-export
+from ..api.session import QueryQueue  # noqa: E402
 
 __all__ = ["Request", "RequestStats", "MicroBatcher"]
 

@@ -2,12 +2,22 @@
 
 Everything here re-exports from :mod:`repro.api.cache` so existing
 imports (``from repro.service.cache import bucket_for``) keep working one
-release; new code should import from ``repro.api``.
+release; new code should import from ``repro.api``.  Importing this
+module raises a :class:`DeprecationWarning`.
 """
 
 from __future__ import annotations
 
-from ..api.cache import (  # noqa: F401 — re-exports
+import warnings
+
+warnings.warn(
+    "repro.service.cache is deprecated; import from repro.api instead "
+    "(e.g. `from repro.api import bucket_for, CompileCache`)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from ..api.cache import (  # noqa: E402, F401 — re-exports
     Bucket,
     CacheStats,
     CompileCache,

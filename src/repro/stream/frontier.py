@@ -38,10 +38,12 @@ in numpy and chunked to bound the (chunk x window) working set.
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 
 import numpy as np
 
 from ..graphs.csr import CSRGraph
+from ..obs import current_registry, get_registry
 from .delta import GraphDelta, edge_keys
 
 __all__ = [
@@ -52,12 +54,52 @@ __all__ = [
     "union_graph",
 ]
 
-# Enumeration observability: "full" counts whole-graph triangle
-# enumerations (the per-update cost this module had before the session's
-# TriangleCache), "incident" counts the cheap insert-wedge enumerations
-# the cache does instead (repro.stream.tricache).  stream_bench asserts
-# the cached path stays at one "full" per session.
-ENUM_COUNTS = {"full": 0, "incident": 0}
+
+class _EnumCounts(Mapping):
+    """Deprecated process-global alias over the metrics registry.
+
+    .. deprecated::
+        Triangle-enumeration counts are per-session metrics now — the
+        ``stream_enumerations{kind=full|incident}`` counter in the
+        owning session's :class:`repro.obs.MetricsRegistry` (read via
+        ``session.obs.metrics.value("stream_enumerations", kind=...)``
+        or any metrics snapshot).  This mapping mirrors the
+        process-global registry, which aggregates every session, so
+        legacy whole-process reads (``ENUM_COUNTS["full"]``) keep
+        working; it is no longer the store, just a view.
+
+    "full" counts whole-graph triangle enumerations (the per-update cost
+    this module had before the session's TriangleCache), "incident"
+    counts the cheap insert-wedge enumerations the cache does instead
+    (repro.stream.tricache).  stream_bench asserts the cached path stays
+    at one "full" per session.
+    """
+
+    _KINDS = ("full", "incident")
+
+    def __getitem__(self, kind: str) -> int:
+        if kind not in self._KINDS:
+            raise KeyError(kind)
+        return int(get_registry().value("stream_enumerations", kind=kind))
+
+    def __setitem__(self, kind: str, value: int) -> None:
+        # Legacy read-modify-write (`ENUM_COUNTS["full"] += 1`) support:
+        # adjust the global counter by the implied delta.
+        get_registry().inc(
+            "stream_enumerations", float(value) - self[kind], kind=kind
+        )
+
+    def __iter__(self):
+        return iter(self._KINDS)
+
+    def __len__(self) -> int:
+        return len(self._KINDS)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
+ENUM_COUNTS = _EnumCounts()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +139,7 @@ def edge_triangles(g: CSRGraph, *, chunk: int = 8192) -> np.ndarray:
     numpy, since the frontier machinery is host-side control logic, not a
     device kernel.  Chunked so the (chunk, max_degree) window stays small.
     """
-    ENUM_COUNTS["full"] += 1
+    current_registry().inc("stream_enumerations", kind="full")
     nnz = g.nnz
     if nnz == 0:
         return np.zeros((0, 3), np.int64)

@@ -40,12 +40,14 @@ that::
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import TYPE_CHECKING
 
 import numpy as np
 
 from ..graphs.csr import CSRGraph
+from ..obs import MetricsRegistry, use_registry, use_tracer
 from .delta import EdgeBatch, GraphDelta, apply_batch
 from .frontier import FrontierResult, compute_frontier, union_graph
 from .tricache import TriangleCache
@@ -135,6 +137,10 @@ class StreamingTrussSession:
         # ``.session`` (the legacy TrussService adapter).
         self.api: "Session" = getattr(session, "session", session)
         self.service = session  # legacy spelling; .stats() works on both
+        # Per-stream metrics, chained to the owning api session's registry
+        # (which chains to the process-global one): counts stay isolated
+        # per stream while every aggregate view still sees them.
+        self.metrics = MetricsRegistry(parent=self.api.obs.metrics)
         self.graph = graph
         if trussness is None:
             from ..api.query import TrussQuery  # lazy: no import cycle
@@ -149,9 +155,27 @@ class StreamingTrussSession:
         self.cache_triangles = bool(cache_triangles)
         self._tri_cache: TriangleCache | None = None
         self._pending: PendingUpdate | None = None
-        self.updates_applied = 0
-        self.update_dispatches = 0
-        self.edges_repeeled = 0
+
+    # Maintenance counters — views over this stream's metrics registry -- #
+    @property
+    def updates_applied(self) -> int:
+        return int(self.metrics.value("stream_updates"))
+
+    @property
+    def update_dispatches(self) -> int:
+        return int(self.metrics.value("stream_update_dispatches"))
+
+    @property
+    def edges_repeeled(self) -> int:
+        return int(self.metrics.value("stream_edges_repeeled"))
+
+    def _instrumented(self):
+        """Scope where this stream's metrics + the api session's tracer
+        are the context-current sinks (frontier/tricache record here)."""
+        ctx = contextlib.ExitStack()
+        ctx.enter_context(use_registry(self.metrics))
+        ctx.enter_context(use_tracer(self.api.obs.tracer))
+        return ctx
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -179,20 +203,36 @@ class StreamingTrussSession:
             raise RuntimeError(
                 "session already has an in-flight update; resolve it first"
             )
-        delta = apply_batch(self.graph, batch, strict=strict)
+        tracer = self.api.obs.tracer
+        with self._instrumented():
+            with tracer.span(
+                "stream.delta", inserts=len(batch.inserts), deletes=len(batch.deletes)
+            ):
+                delta = apply_batch(self.graph, batch, strict=strict)
 
-        # Incremental triangle state: reuse the cached list, enumerating
-        # only the wedges the batch's inserts touch.  The union graph is
-        # built once and shared between the cache and the frontier.
-        union_tri_keys = union_pair = None
-        if self.cache_triangles:
-            if self._tri_cache is None:
-                self._tri_cache = TriangleCache(self.graph)
-            union_pair = union_graph(delta)
-            union_tri_keys = self._tri_cache.union_triangles(delta, union=union_pair)
-        fr = compute_frontier(
-            self.trussness, delta, tri_keys=union_tri_keys, union=union_pair
-        )
+            # Incremental triangle state: reuse the cached list, enumerating
+            # only the wedges the batch's inserts touch.  The union graph is
+            # built once and shared between the cache and the frontier.
+            union_tri_keys = union_pair = None
+            if self.cache_triangles:
+                with tracer.span("stream.triangles") as span:
+                    if self._tri_cache is None:
+                        self._tri_cache = TriangleCache(self.graph)
+                    union_pair = union_graph(delta)
+                    union_tri_keys = self._tri_cache.union_triangles(
+                        delta, union=union_pair
+                    )
+                    span.attrs["triangles"] = int(union_tri_keys.shape[0])
+            with tracer.span("stream.frontier") as span:
+                fr = compute_frontier(
+                    self.trussness, delta, tri_keys=union_tri_keys, union=union_pair
+                )
+                span.attrs["frontier"] = fr.size
+            self.metrics.observe(
+                "stream_frontier_frac",
+                fr.frac,
+                buckets=(0.01, 0.05, 0.1, 0.25, 0.5, 1.0),
+            )
         g_new = delta.new_graph
 
         # Trussness carried over from the committed state (inserted edges
@@ -232,10 +272,10 @@ class StreamingTrussSession:
         if self._tri_cache is not None and union_tri_keys is not None:
             self._tri_cache.commit(delta, union_tri_keys)
         self._pending = None
-        self.updates_applied += 1
         dispatches = 1 if fr.size else 0
-        self.update_dispatches += dispatches
-        self.edges_repeeled += fr.size
+        self.metrics.inc("stream_updates")
+        self.metrics.inc("stream_update_dispatches", dispatches)
+        self.metrics.inc("stream_edges_repeeled", fr.size)
         return StreamUpdateResult(
             trussness=t_new,
             kmax=self.kmax,

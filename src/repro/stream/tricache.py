@@ -20,9 +20,12 @@ triangle list for the next update.  Triangles are stored as (T, 3)
 composite *edge-key* triples — positional edge ids shift on every CSR
 rebuild, keys don't.
 
-``ENUM_COUNTS`` in :mod:`repro.stream.frontier` tracks full vs. incident
-enumerations; ``stream_bench`` asserts a cached session does exactly one
-full enumeration regardless of how many updates it applies.
+The ``stream_enumerations{kind=full|incident}`` metric (recorded into
+the active session's :mod:`repro.obs` registry; the deprecated
+``ENUM_COUNTS`` alias mirrors the process-global aggregate) tracks full
+vs. incident enumerations; ``stream_bench`` asserts a cached session
+does exactly one full enumeration regardless of how many updates it
+applies.
 """
 
 from __future__ import annotations
@@ -30,8 +33,9 @@ from __future__ import annotations
 import numpy as np
 
 from ..graphs.csr import CSRGraph
+from ..obs import current_registry
 from .delta import GraphDelta, edge_keys
-from .frontier import ENUM_COUNTS, edge_triangles, union_graph
+from .frontier import edge_triangles, union_graph
 
 __all__ = ["TriangleCache", "triangles_incident"]
 
@@ -51,7 +55,7 @@ def triangles_incident(g: CSRGraph, keys: np.ndarray) -> np.ndarray:
     endpoints in the symmetrized adjacency; a triangle touched by several
     listed edges is deduplicated.
     """
-    ENUM_COUNTS["incident"] += 1
+    current_registry().inc("stream_enumerations", kind="incident")
     keys = np.asarray(keys, np.int64)
     if keys.size == 0 or g.nnz == 0:
         return np.zeros((0, 3), np.int64)
