@@ -1,11 +1,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-peel bench-stream bench-api bench-obs lint
+.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
 	$(PYTHON) -m pytest -x -q
+
+# Chaos gate: fault storms (dispatch/oom/compile/poison/clock-skew) over
+# 3 fixed seeds; writes the storm's metrics snapshot (retries, fallbacks,
+# quarantines, faults injected) to CHAOS_metrics.json for CI to archive.
+test-chaos:
+	CHAOS_METRICS_OUT=CHAOS_metrics.json \
+		$(PYTHON) -m pytest tests/test_chaos.py tests/test_resilience.py -q
 
 # Tiny serving benchmark: 6 small graphs, batch widths 1 and 2.
 bench-smoke:

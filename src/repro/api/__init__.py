@@ -25,7 +25,15 @@ from .cache import (
     build_peel,
     enable_persistent_cache,
 )
-from .errors import TrussTimeoutError
+from .errors import (
+    CheckpointError,
+    CompileError,
+    DeviceError,
+    InvalidGraphError,
+    QueryFailedError,
+    TrussError,
+    TrussTimeoutError,
+)
 from .planner import Plan, PlannedBatch, Planner, QueryState, RequestStats
 from .query import PLACEMENTS, WORKLOADS, TrussQuery
 from .registry import (
@@ -37,6 +45,7 @@ from .registry import (
     available_backends,
     choose_backend,
     default_kernel,
+    fallback_backends,
     get_backend,
     register_backend,
 )
@@ -50,7 +59,14 @@ __all__ = [
     "solve",
     "Session",
     "TrussFuture",
+    # failure taxonomy (repro.errors re-export)
+    "TrussError",
+    "InvalidGraphError",
+    "CompileError",
+    "DeviceError",
+    "QueryFailedError",
     "TrussTimeoutError",
+    "CheckpointError",
     # planner / lowering
     "Planner",
     "Plan",
@@ -69,6 +85,7 @@ __all__ = [
     "available_backends",
     "choose_backend",
     "default_kernel",
+    "fallback_backends",
     # shape buckets + compile cache
     "Bucket",
     "bucket_for",

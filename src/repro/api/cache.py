@@ -27,6 +27,7 @@ from typing import Callable, Hashable, NamedTuple
 
 import numpy as np
 
+from ..errors import CompileError, TrussError
 from ..graphs.csr import CSRGraph
 from ..obs import MetricsRegistry
 
@@ -207,8 +208,20 @@ class CompileCache:
             if exe is not None:
                 self.stats.record_hit()
                 return exe, True
+            try:
+                exe = self._exes[key] = self._builder(key)
+            except TrussError:
+                raise  # already typed (e.g. an injected CompileError)
+            except Exception as e:
+                # A failed build is a CompileError no matter which layer
+                # threw — the resilience runner keys its fallback on it.
+                raise CompileError(
+                    f"building executor for bucket={bucket} slots={slots} "
+                    f"variant={variant} failed: {e}",
+                    bucket=bucket,
+                    cause=e,
+                ) from e
             self.stats.record_compile()
-            exe = self._exes[key] = self._builder(key)
             return exe, False
 
     def __len__(self) -> int:

@@ -1,34 +1,32 @@
-"""Typed errors of the declarative query API."""
+"""Typed errors of the declarative query API.
+
+The taxonomy itself lives in :mod:`repro.errors` (a dependency-free
+module so low layers — ``graphs.csr`` validation, ``exec.peel`` — can
+raise typed errors without import cycles); this module is its public
+face on ``repro.api``.  See :class:`repro.errors.TrussError` for the
+context contract every subclass carries (bucket / backend / slot /
+query_id / injected) and :mod:`repro.resilience` for the policy layer
+keyed on it.
+"""
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING
+from ..errors import (
+    CheckpointError,
+    CompileError,
+    DeviceError,
+    InvalidGraphError,
+    QueryFailedError,
+    TrussError,
+    TrussTimeoutError,
+)
 
-if TYPE_CHECKING:  # pragma: no cover
-    from .cache import Bucket
-
-__all__ = ["TrussTimeoutError"]
-
-
-class TrussTimeoutError(TimeoutError):
-    """``TrussFuture.result(timeout=...)`` expired before the query resolved.
-
-    Carries enough context to act on — which shape bucket the request was
-    waiting in and how deep the session's queue was at expiry — instead of
-    a bare ``TimeoutError`` that forces callers to re-derive both.
-    """
-
-    def __init__(
-        self,
-        message: str,
-        *,
-        bucket: "Bucket | None" = None,
-        queue_depth: int = 0,
-        request_id: int | None = None,
-        waited_s: float = 0.0,
-    ):
-        super().__init__(message)
-        self.bucket = bucket
-        self.queue_depth = int(queue_depth)
-        self.request_id = request_id
-        self.waited_s = float(waited_s)
+__all__ = [
+    "TrussError",
+    "InvalidGraphError",
+    "CompileError",
+    "DeviceError",
+    "QueryFailedError",
+    "TrussTimeoutError",
+    "CheckpointError",
+]

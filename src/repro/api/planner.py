@@ -32,10 +32,12 @@ from typing import Any, Optional
 import numpy as np
 
 from ..core.truss import KTrussResult, TrussDecomposition
+from ..errors import DeviceError, TrussError
 from ..graphs.pack import pack_problems
 from ..graphs.stats import imbalance_stats
 from ..obs import current_tracer, record_peel_batch
 from ..obs import clock as obs_clock
+from ..resilience.faults import inject
 from .cache import Bucket, CompileCache, bucket_for
 from .query import TrussQuery
 from .registry import BackendKey, choose_backend, default_kernel, get_backend
@@ -305,6 +307,19 @@ class Planner:
         """
         bucket, backend, queries = batch.bucket, batch.backend, batch.queries
         tracer = current_tracer()
+        qids = tuple(st.id for st in queries)
+        # Fault sites (repro.resilience.faults): no-ops without an active
+        # FaultPlan; under one, these are where the chaos suite makes the
+        # dispatch fail in every taxonomy-distinct way.
+        for i, st in enumerate(queries):
+            inject(
+                "poison",
+                slot=i,
+                query=st.id,
+                queries=qids,
+                bucket=bucket,
+                backend=str(backend),
+            )
         t0 = obs_clock.now()
         with tracer.span(
             "pack", members=len(queries), slots=batch.slots, layout=backend.layout
@@ -319,6 +334,7 @@ class Planner:
             )
         pack_dt = obs_clock.now() - t0
         with tracer.span("compile", backend=str(backend)) as span:
+            inject("compile", bucket=bucket, backend=str(backend), queries=qids)
             exe, hit = cache.get(bucket, batch.slots, self.cache_variant(backend))
             span.attrs["hit"] = hit
         for st in queries:
@@ -355,16 +371,31 @@ class Planner:
 
         # peel() synchronizes internally (its iteration-cap check reads back
         # the done flags), so dt covers the whole dispatch.
+        inject("clock_skew", bucket=bucket, backend=str(backend), queries=qids)
+        inject("device_oom", bucket=bucket, backend=str(backend), queries=qids)
+        inject("dispatch", bucket=bucket, backend=str(backend), queries=qids)
         t0 = obs_clock.now()
-        st_dev = exe.peel(
-            packed.problem,
-            slot_ids=slot_ids,
-            k0=k0,
-            single_level=single_level,
-            alive0=alive0,
-            frozen=frozen,
-            frozen_truss=frozen_truss,
-        )
+        try:
+            st_dev = exe.peel(
+                packed.problem,
+                slot_ids=slot_ids,
+                k0=k0,
+                single_level=single_level,
+                alive0=alive0,
+                frozen=frozen,
+                frozen_truss=frozen_truss,
+            )
+        except TrussError:
+            raise  # already typed (iteration cap, injected faults)
+        except Exception as e:
+            # Raw XLA/Pallas failures become typed device faults so the
+            # resilience layer can retry/fall back on them.
+            raise DeviceError(
+                f"peel dispatch failed on backend {backend}: {e}",
+                bucket=bucket,
+                backend=backend,
+                cause=e,
+            ) from e
         dt = obs_clock.now() - t0
 
         with tracer.span("unpack", members=len(queries)):

@@ -39,6 +39,7 @@ __all__ = [
     "available_backends",
     "choose_backend",
     "default_kernel",
+    "fallback_backends",
 ]
 
 FORMULATIONS = ("coarse", "fine")
@@ -178,6 +179,31 @@ def choose_backend(
     if key not in _REGISTRY:
         raise KeyError(f"auto-chosen backend {key} is not registered")
     return key
+
+
+def fallback_backends(key: Union[BackendKey, str, tuple]) -> tuple[BackendKey, ...]:
+    """The degradation chain below ``key``, most-capable first.
+
+    Every registered backend is bit-identical (the parity contract), so
+    falling down this chain on a compile/kernel fault trades performance
+    for availability, never correctness.  The chain steps down one axis
+    at a time and **preserves the layout** (a mesh session requires
+    ``aligned``; re-packing stays shape-compatible):
+
+    1. ``pallas -> xla`` — same formulation, same layout: a hand-written
+       kernel that fails to build still has the fused-ops twin;
+    2. ``fine -> coarse`` on ``xla`` — the row-task formulation as the
+       last resort (slower under imbalance, but always compilable).
+
+    Only registered keys are returned, and never ``key`` itself.
+    """
+    key = get_backend(key).key
+    chain: list[BackendKey] = []
+    if key.kernel == "pallas":
+        chain.append(BackendKey(key.formulation, "xla", key.layout))
+    if key.formulation == "fine":
+        chain.append(BackendKey("coarse", "xla", key.layout))
+    return tuple(k for k in chain if k != key and k in _REGISTRY)
 
 
 def _register_defaults() -> None:

@@ -14,6 +14,7 @@ module now; the lowering itself lives in :class:`repro.api.Planner`.
 
 from __future__ import annotations
 
+import contextlib
 from collections import deque
 from typing import Any
 
@@ -22,6 +23,9 @@ import numpy as np
 from ..graphs.csr import CSRGraph
 from ..obs import MetricsRegistry, Observability
 from ..obs import clock as obs_clock
+from ..resilience.faults import FaultPlan, use_plan
+from ..resilience.retry import RetryPolicy
+from ..resilience.runner import ResilientRunner
 from .cache import CompileCache, bucket_for, enable_persistent_cache
 from .errors import TrussTimeoutError
 from .planner import PlannedBatch, Planner, QueryState
@@ -67,6 +71,18 @@ class QueryQueue:
         d = state.query.deadline_s
         absolute = state.submitted_at + d if d is not None else float("inf")
         return (absolute, state.id)
+
+    def discard(self, state: QueryState) -> bool:
+        """Remove one specific pending query (shed-on-timeout's reclaim).
+
+        Matches by **identity**, not equality — ``QueryState`` is a
+        dataclass over numpy-bearing queries, so ``==`` is both wrong
+        (distinct queries can compare equal) and broken (ambiguous array
+        truth).  Returns whether the query was still pending.
+        """
+        n = len(self._pending)
+        self._pending = deque(st for st in self._pending if st is not state)
+        return len(self._pending) != n
 
     def next_batch(self, group=None) -> list[QueryState]:
         """Drain up to ``max_batch`` queries sharing one group."""
@@ -127,7 +143,11 @@ class TrussFuture:
         — :meth:`QueryState.time_remaining`, the one deadline rule on the
         observability clock; an explicit ``timeout=None`` waits until
         resolved.  On expiry raises :class:`TrussTimeoutError` carrying
-        the bucket and the queue depth at expiry.
+        the bucket and the queue depth at expiry; under the session's
+        default ``shed_on_timeout=True`` the query is also marked dead —
+        its queue slot is reclaimed for batch-mates (no leak) and later
+        ``result()`` calls re-raise the same error instead of
+        re-dispatching abandoned work.
         """
         if timeout is _UNSET:
             timeout = self._state.time_remaining()
@@ -136,16 +156,22 @@ class TrussFuture:
             waited = obs_clock.now() - t0
             if timeout is not None and waited >= timeout:
                 self._session._record_deadline_miss(self._state, waited)
-                raise TrussTimeoutError(
+                shed = self._session.shed_on_timeout
+                err = TrussTimeoutError(
                     f"query {self._state.id} ({self._state.query.workload}) "
                     f"unresolved after {waited:.3f}s (timeout={timeout}s); "
                     f"bucket={self._state.bucket}, "
-                    f"queue_depth={len(self._session.queue)}",
+                    f"queue_depth={len(self._session.queue)}"
+                    + ("; query shed" if shed else ""),
                     bucket=self._state.bucket,
                     queue_depth=len(self._session.queue),
                     request_id=self._state.id,
                     waited_s=waited,
+                    shed=shed,
                 )
+                if shed:
+                    self._session._shed(self._state, err)
+                raise err
             batch = self._session.queue.next_batch(group=self._state.group)
             if not batch:
                 raise RuntimeError(
@@ -190,6 +216,17 @@ class Session:
       metrics: route this session's metrics into an existing
         :class:`repro.obs.MetricsRegistry` (default: a private registry
         chained to the process-global one).
+      faults: a :class:`repro.resilience.FaultPlan` injected at the
+        planner's fault sites for this session's dispatches (``None``
+        consults the ``REPRO_FAULTS`` env var; production leaves both
+        unset — the hooks are no-ops).
+      retry: the :class:`repro.resilience.RetryPolicy` governing
+        retry/backoff, registry fallback, and batch bisection (default
+        policy: 3 attempts, exponential backoff, fallback + bisect on).
+      shed_on_timeout: when a ``result(timeout=...)`` expires, mark the
+        query dead and reclaim its queue slot (default).  ``False``
+        restores the legacy leak-prone behavior where a timed-out query
+        stays queued and a later ``result()`` may still resolve it.
     """
 
     def __init__(
@@ -206,6 +243,9 @@ class Session:
         cache_dir: str | None = None,
         trace: bool | str | None = None,
         metrics: MetricsRegistry | None = None,
+        faults: FaultPlan | None = None,
+        retry: RetryPolicy | None = None,
+        shed_on_timeout: bool = True,
     ):
         if cache_dir is not None:
             enable_persistent_cache(cache_dir)
@@ -232,6 +272,12 @@ class Session:
         )
         self.queue = QueryQueue(max_batch=max_batch)
         self._futures: dict[int, TrussFuture] = {}
+        self.faults = faults if faults is not None else FaultPlan.from_env()
+        self.retry = retry or RetryPolicy()
+        self.shed_on_timeout = bool(shed_on_timeout)
+        self.runner = ResilientRunner(
+            self._dispatch_once, policy=self.retry, metrics=self.obs.metrics
+        )
 
     # Convenience mirrors of the planner's config ----------------------- #
     @property
@@ -266,6 +312,46 @@ class Session:
     @property
     def deadline_misses(self) -> int:
         return int(self.obs.metrics.value("deadline_misses"))
+
+    def _counter_total(self, name: str) -> int:
+        """Sum a counter across every label series (e.g. retries{backend=})."""
+        prefix = name + "{"
+        return int(
+            sum(
+                v
+                for k, v in self.obs.metrics.snapshot()["counters"].items()
+                if k == name or k.startswith(prefix)
+            )
+        )
+
+    # Resilience counters (repro.resilience.runner / faults) ------------ #
+    @property
+    def retries(self) -> int:
+        return self._counter_total("retries")
+
+    @property
+    def backend_fallbacks(self) -> int:
+        return self._counter_total("backend_fallbacks")
+
+    @property
+    def queries_quarantined(self) -> int:
+        return int(self.obs.metrics.value("queries_quarantined"))
+
+    @property
+    def batch_bisects(self) -> int:
+        return int(self.obs.metrics.value("batch_bisects"))
+
+    @property
+    def queries_failed(self) -> int:
+        return int(self.obs.metrics.value("queries_failed"))
+
+    @property
+    def queries_shed(self) -> int:
+        return int(self.obs.metrics.value("queries_shed"))
+
+    @property
+    def faults_injected(self) -> int:
+        return self._counter_total("faults_injected")
 
     # ------------------------------------------------------------------ #
     # Submission
@@ -368,20 +454,22 @@ class Session:
             slots=self.planner.max_batch,
         )
 
-    def _run_batch(self, planned: PlannedBatch) -> int:
-        batch = planned.queries
-        # The batch was already dequeued, so if the dispatch fails its
-        # futures must carry the error — otherwise they are stranded
-        # unresolvable.
-        try:
-            with self.obs.activate():
-                results = self.planner.execute(planned, self.cache)
-        except Exception as e:
-            for st in batch:
-                self._futures.pop(st.id)._fail(e)
-            raise
+    def _dispatch_once(self, planned: PlannedBatch) -> list[Any]:
+        """One attempt at one packed dispatch (the runner's retry unit).
+
+        Activates the session's obs sinks and fault plan around the
+        planner, and counts the per-dispatch serving metrics only on
+        success — a retried dispatch is one dispatch, not two.
+        """
+        ctx = contextlib.ExitStack()
+        ctx.enter_context(self.obs.activate())
+        if self.faults is not None:
+            ctx.enter_context(use_plan(self.faults))
+        with ctx:
+            results = self.planner.execute(planned, self.cache)
         # execute() stamps the dispatch's own duration on every member;
         # host-side packing is accounted separately (stats.pack_time_s).
+        batch = planned.queries
         m = self.obs.metrics
         m.inc("device_seconds_total", batch[0].stats.device_time_s)
         m.inc("dispatches")
@@ -392,9 +480,43 @@ class Session:
             len(batch) / planned.slots,
             buckets=(0.125, 0.25, 0.5, 0.75, 1.0),
         )
+        return results
+
+    def _shed(self, state: QueryState, err: BaseException) -> None:
+        """Mark a timed-out query dead: reclaim its queue slot, fail its
+        future, count the shed.  The batch former never sees it again."""
+        self.queue.discard(state)
+        fut = self._futures.pop(state.id, None)
+        if fut is not None:
+            fut._fail(err)
+        self.obs.metrics.inc("queries_shed")
+        self.obs.metrics.set_gauge("queue_depth", len(self.queue))
+
+    def _run_batch(self, planned: PlannedBatch) -> int:
+        batch = planned.queries
+        # The batch was already dequeued, so its futures must always end
+        # up resolved or failed — stranded-unresolvable is the one
+        # forbidden outcome.  The runner turns member/device/compile
+        # faults into per-query outcomes (quarantine, retry, fallback,
+        # bisect); anything non-taxonomy still fails everyone and
+        # propagates (a genuine bug should stay loud).
+        try:
+            outcomes = self.runner.run(planned)
+        except Exception as e:
+            for st in batch:
+                fut = self._futures.pop(st.id, None)
+                if fut is not None:
+                    fut._fail(e)
+            raise
+        m = self.obs.metrics
+        for out in outcomes:
+            fut = self._futures.pop(out.state.id)
+            if out.ok:
+                fut._resolve(out.result)
+            else:
+                m.inc("queries_failed")
+                fut._fail(out.error)
         m.set_gauge("queue_depth", len(self.queue))
-        for st, res in zip(batch, results):
-            self._futures.pop(st.id)._resolve(res)
         return len(batch)
 
     def _record_deadline_miss(self, state: QueryState, waited_s: float) -> None:
@@ -419,6 +541,13 @@ class Session:
             "deadline_misses": self.deadline_misses,
             "pending": len(self.queue),
             "device_time_s": round(self.device_time_s, 6),
+            "retries": self.retries,
+            "backend_fallbacks": self.backend_fallbacks,
+            "queries_quarantined": self.queries_quarantined,
+            "batch_bisects": self.batch_bisects,
+            "queries_failed": self.queries_failed,
+            "queries_shed": self.queries_shed,
+            "faults_injected": self.faults_injected,
             **{f"cache_{k}": v for k, v in self.cache.stats.row().items()},
             **{f"planner_{k}": v for k, v in self.planner.stats().items()},
         }

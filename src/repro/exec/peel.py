@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core.eager_coarse import support_coarse_eager
 from ..core.eager_fine import FineProblem, support_fine_eager, support_fine_owner
+from ..errors import DeviceError
 from ..obs import current_registry, current_tracer
 
 __all__ = ["PeelState", "make_problem_support", "build_peel", "PeelExecutor"]
@@ -327,8 +328,12 @@ class PeelExecutor:
         with tracer.span("device-wait"):
             all_done = bool(np.asarray(st.done).all())
         if not all_done:
-            raise RuntimeError(
+            # Typed (DeviceError is still a RuntimeError) so the
+            # resilience layer treats a capped peel like any other
+            # device-side dispatch failure: retry, then fall back.
+            raise DeviceError(
                 f"peel hit the iteration cap after {int(st.total_iters)} "
-                f"trips with slots unfinished: done={np.asarray(st.done)}"
+                f"trips with slots unfinished: done={np.asarray(st.done)}",
+                site="peel",
             )
         return st

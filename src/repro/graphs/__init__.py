@@ -1,6 +1,6 @@
 """Graph substrate: CSR containers, generators, imbalance statistics."""
 
-from .csr import CSRGraph, DeviceCSR, build_upper_csr, from_edges
+from .csr import CSRGraph, DeviceCSR, build_upper_csr, from_edges, validate_csr
 from .generators import barabasi, clustered, erdos, rmat, road, suite, SUITE_SPECS
 from .pack import (
     PackedGraph,
@@ -16,6 +16,7 @@ __all__ = [
     "DeviceCSR",
     "build_upper_csr",
     "from_edges",
+    "validate_csr",
     "PackedGraph",
     "PackedProblem",
     "pack_graphs",

@@ -24,12 +24,110 @@ from typing import NamedTuple
 
 import numpy as np
 
+from ..errors import InvalidGraphError
+
 __all__ = [
     "CSRGraph",
     "DeviceCSR",
     "build_upper_csr",
     "from_edges",
+    "validate_csr",
 ]
+
+
+def validate_csr(
+    n: int, rowptr: np.ndarray, colidx: np.ndarray, *, name: str = "graph"
+) -> None:
+    """Check the CSR invariants every algorithm downstream assumes.
+
+    Raises :class:`repro.errors.InvalidGraphError` naming the *first*
+    violating 1-based row (and the broken invariant's ``kind``) — today a
+    malformed input would otherwise fail deep inside packing or the
+    device peel with an opaque shape/index error that implicates the
+    wrong layer.  Checked invariants:
+
+    * ``rowptr`` has ``n + 1`` entries, starts at 0, is nondecreasing,
+      and ends at ``nnz``;
+    * every column id lies in ``[1, n]`` (1-based; 0 is the pad/prune
+      sentinel and must never appear host-side);
+    * no self-loops (``colidx[e] == row(e)``);
+    * columns strictly ascend within each row (sorted, no duplicates —
+      required by the sorted intersections of the fine-grained kernels).
+
+    Symmetrized CSRs (``undirected_csr``) satisfy all of these too, so
+    the check runs at every construction; upper-triangularity itself is
+    a builder contract (``from_edges``), not re-checked here.
+    """
+
+    def bad(message, *, row=None, kind=None):
+        raise InvalidGraphError(
+            f"graph {name!r}: {message}", row=row, kind=kind, graph=name
+        )
+
+    rowptr = np.asarray(rowptr)
+    colidx = np.asarray(colidx)
+    nnz = int(colidx.shape[0])
+    if rowptr.ndim != 1 or rowptr.shape[0] != n + 1:
+        bad(
+            f"rowptr must have n+1={n + 1} entries, got shape {rowptr.shape}",
+            kind="rowptr_len",
+        )
+    if n >= 0 and rowptr.shape[0] and int(rowptr[0]) != 0:
+        bad(f"rowptr[0] must be 0, got {int(rowptr[0])}", row=1, kind="rowptr_start")
+    diffs = np.diff(rowptr)
+    dec = np.nonzero(diffs < 0)[0]
+    if dec.size:
+        row = int(dec[0]) + 1
+        bad(f"rowptr decreases at row {row}", row=row, kind="rowptr_unsorted")
+    if int(rowptr[-1]) != nnz:
+        bad(
+            f"rowptr[-1]={int(rowptr[-1])} does not match nnz={nnz}",
+            row=n,
+            kind="rowptr_mismatch",
+        )
+    if not nnz:
+        return
+
+    def row_of(e: int) -> int:  # smallest v with rowptr[v] > e is e's 1-based row
+        return int(np.searchsorted(rowptr, e, side="right"))
+
+    out_of_range = np.nonzero((colidx < 1) | (colidx > n))[0]
+    if out_of_range.size:
+        e = int(out_of_range[0])
+        bad(
+            f"colidx[{e}]={int(colidx[e])} outside [1, {n}] at row {row_of(e)}",
+            row=row_of(e),
+            kind="col_range",
+        )
+    rows = np.searchsorted(rowptr, np.arange(nnz), side="right").astype(np.int64)
+    loops = np.nonzero(colidx == rows)[0]
+    if loops.size:
+        e = int(loops[0])
+        bad(
+            f"self-loop ({row_of(e)}, {int(colidx[e])}) at row {row_of(e)}",
+            row=row_of(e),
+            kind="self_loop",
+        )
+    if nnz > 1:
+        d = np.diff(colidx.astype(np.int64))
+        same_row = rows[1:] == rows[:-1]
+        unsorted = np.nonzero(same_row & (d < 0))[0]
+        if unsorted.size:
+            e = int(unsorted[0]) + 1
+            bad(
+                f"columns not ascending within row {row_of(e)} "
+                f"(colidx[{e - 1}]={int(colidx[e - 1])} > colidx[{e}]={int(colidx[e])})",
+                row=row_of(e),
+                kind="unsorted_row",
+            )
+        dupes = np.nonzero(same_row & (d == 0))[0]
+        if dupes.size:
+            e = int(dupes[0]) + 1
+            bad(
+                f"duplicate column {int(colidx[e])} within row {row_of(e)}",
+                row=row_of(e),
+                kind="duplicate",
+            )
 
 
 class DeviceCSR(NamedTuple):
@@ -78,6 +176,15 @@ class CSRGraph:
     rowptr: np.ndarray  # (n + 1,) int64 -> cast to int32 on device
     colidx: np.ndarray  # (nnz,) int32, 1-based, ascending per row
     name: str = "graph"
+    # Construction-time invariant check (validate_csr): malformed input
+    # fails HERE with a typed InvalidGraphError naming the violating row,
+    # not deep inside packing with an opaque shape error.  ``False`` is
+    # for tests/tools that need to materialize a known-bad graph.
+    validate: dataclasses.InitVar[bool] = True
+
+    def __post_init__(self, validate: bool):
+        if validate:
+            validate_csr(self.n, self.rowptr, self.colidx, name=self.name)
 
     # ------------------------------------------------------------------ #
     # Basic properties

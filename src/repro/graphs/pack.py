@@ -20,6 +20,7 @@ import dataclasses
 
 import numpy as np
 
+from ..errors import InvalidGraphError
 from .csr import CSRGraph
 
 __all__ = ["PackedGraph", "PackedProblem", "pack_graphs", "pack_problems", "stack_problems"]
@@ -118,16 +119,22 @@ def _check_member_capacity(graphs, *, slot_n: int, slot_nnz: int) -> None:
     """
     for i, g in enumerate(graphs):
         if g.n > slot_n:
-            raise ValueError(
+            raise InvalidGraphError(
                 f"member {i} ({g.name!r}) has n={g.n} vertices, exceeding "
                 f"its slot's capacity slot_n={slot_n}; use a bucket with "
-                f"n_pad >= {g.n}"
+                f"n_pad >= {g.n}",
+                slot=i,
+                graph=g.name,
+                kind="slot_overflow",
             )
         if g.nnz > slot_nnz:
-            raise ValueError(
+            raise InvalidGraphError(
                 f"member {i} ({g.name!r}) has nnz={g.nnz} edges, exceeding "
                 f"its slot's capacity slot_nnz={slot_nnz}; use a bucket "
-                f"with nnz_pad >= {g.nnz}"
+                f"with nnz_pad >= {g.nnz}",
+                slot=i,
+                graph=g.name,
+                kind="slot_overflow",
             )
 
 

@@ -31,6 +31,7 @@ __all__ = [
     "set_clock",
     "use_clock",
     "now",
+    "sleep",
     "remaining",
 ]
 
@@ -40,6 +41,15 @@ class Clock:
 
     def now(self) -> float:  # pragma: no cover - interface
         raise NotImplementedError
+
+    def sleep(self, dt: float) -> None:
+        """Block for ``dt`` seconds of this clock's time.
+
+        The resilience layer's retry backoff waits through here, so a
+        fake clock makes backoff tests instantaneous (time advances,
+        nothing actually sleeps).
+        """
+        time.sleep(max(0.0, float(dt)))
 
 
 class MonotonicClock(Clock):
@@ -67,6 +77,9 @@ class FakeClock(Clock):
         if dt < 0:
             raise ValueError(f"cannot advance time backwards (dt={dt})")
         self._t += float(dt)
+
+    def sleep(self, dt: float) -> None:
+        self.advance(max(0.0, float(dt)))
 
 
 _default_clock = MonotonicClock()
@@ -98,6 +111,11 @@ def use_clock(clock: Clock):
 def now() -> float:
     """Current time on the active clock (monotonic seconds)."""
     return get_clock().now()
+
+
+def sleep(dt: float) -> None:
+    """Sleep ``dt`` seconds on the active clock (fake clocks just advance)."""
+    get_clock().sleep(dt)
 
 
 def remaining(submitted_at: float, deadline_s: float | None) -> float | None:

@@ -1,0 +1,75 @@
+"""repro.resilience — fault domains for the batched peel path.
+
+The serving stack packs many users' graphs block-diagonally into ONE
+compiled dispatch, so without isolation a single malformed CSR, failed
+compile, or device fault fails every batch-mate.  This package is the
+policy layer that keeps fault domains per-query:
+
+* :mod:`.faults`     — deterministic fault-injection harness: a
+  :class:`FaultPlan` (``Session(faults=...)`` or the ``REPRO_FAULTS``
+  env var) fires typed failures by site + seed — compile error, device
+  OOM, dispatch exception, poisoned batch member, clock skew — so the
+  chaos suite drives every failure path on demand;
+* :mod:`.retry`      — :class:`RetryPolicy`: bounded attempts with
+  exponential backoff (on the fake-able obs clock) and the registry
+  fallback switch;
+* :mod:`.runner`     — :class:`ResilientRunner`: quarantines
+  member-attributed failures, retries transient device faults, falls
+  down the backend registry (pallas→xla, fine→coarse — bit-identical by
+  the parity contract) on compile/kernel faults, and bisects batches to
+  isolate unattributed poison members.  One poison query yields one
+  typed per-query error; every batch-mate still resolves bit-identically;
+* :mod:`.checkpoint` — streaming checkpoint/restore: a
+  ``StreamingTrussSession``'s CSR + trussness + TriangleCache serialized
+  at update boundaries and restored after a crash, equal to an
+  uninterrupted session.
+
+Every retry, fallback, quarantine, bisect, and shed is counted in the
+session's :mod:`repro.obs` metrics registry, so tests assert on
+observable behavior, not logs.
+"""
+
+from .checkpoint import (
+    CHECKPOINT_VERSION,
+    Checkpoint,
+    latest_checkpoint,
+    load_checkpoint,
+    restore_session,
+    save_checkpoint,
+)
+from .faults import (
+    FAULT_SITES,
+    FAULTS_ENV_VAR,
+    FaultPlan,
+    FaultSpec,
+    current_plan,
+    inject,
+    parse_faults,
+    poison_csr_arrays,
+    use_plan,
+)
+from .retry import RetryPolicy
+from .runner import ResilientRunner
+
+__all__ = [
+    # fault injection
+    "FAULT_SITES",
+    "FAULTS_ENV_VAR",
+    "FaultSpec",
+    "FaultPlan",
+    "parse_faults",
+    "current_plan",
+    "use_plan",
+    "inject",
+    "poison_csr_arrays",
+    # retry/fallback policy + runner
+    "RetryPolicy",
+    "ResilientRunner",
+    # streaming checkpoint/restore
+    "CHECKPOINT_VERSION",
+    "Checkpoint",
+    "save_checkpoint",
+    "load_checkpoint",
+    "restore_session",
+    "latest_checkpoint",
+]

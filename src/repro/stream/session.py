@@ -42,10 +42,12 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 from typing import TYPE_CHECKING
 
 import numpy as np
 
+from ..errors import InvalidGraphError
 from ..graphs.csr import CSRGraph
 from ..obs import MetricsRegistry, use_registry, use_tracer
 from .delta import EdgeBatch, GraphDelta, apply_batch
@@ -132,6 +134,8 @@ class StreamingTrussSession:
         *,
         trussness: np.ndarray | None = None,
         cache_triangles: bool = True,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 1,
     ):
         # Accept a repro.api.Session or anything wrapping one under
         # ``.session`` (the legacy TrussService adapter).
@@ -148,13 +152,24 @@ class StreamingTrussSession:
             trussness = self.api.submit(TrussQuery.decompose(graph)).result().trussness
         trussness = np.asarray(trussness, np.int32)
         if trussness.shape[0] != graph.nnz:
-            raise ValueError(
-                f"trussness has {trussness.shape[0]} entries, graph has {graph.nnz}"
+            raise InvalidGraphError(
+                f"trussness has {trussness.shape[0]} entries, graph has "
+                f"{graph.nnz}",
+                kind="trussness_len",
+                graph=graph.name,
             )
         self.trussness = trussness
         self.cache_triangles = bool(cache_triangles)
         self._tri_cache: TriangleCache | None = None
         self._pending: PendingUpdate | None = None
+        # Crash durability (repro.resilience.checkpoint): with a
+        # checkpoint_dir, every `checkpoint_every`-th commit serializes
+        # graph + trussness + triangle cache at the update boundary.
+        if checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got {checkpoint_every}")
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self._ckpt_seq = 0  # monotone auto-checkpoint sequence number
 
     # Maintenance counters — views over this stream's metrics registry -- #
     @property
@@ -180,11 +195,26 @@ class StreamingTrussSession:
     # ------------------------------------------------------------------ #
     @classmethod
     def for_graph(cls, graph: CSRGraph, **session_kwargs) -> "StreamingTrussSession":
-        """Standalone session over a private one-slot ``repro.api.Session``."""
+        """Standalone session over a private one-slot ``repro.api.Session``.
+
+        Stream-level knobs (``trussness``, ``cache_triangles``,
+        ``checkpoint_dir``, ``checkpoint_every``) are split off; the rest
+        configures the private api session.
+        """
         from ..api.session import Session
 
+        stream_kwargs = {
+            k: session_kwargs.pop(k)
+            for k in (
+                "trussness",
+                "cache_triangles",
+                "checkpoint_dir",
+                "checkpoint_every",
+            )
+            if k in session_kwargs
+        }
         session_kwargs.setdefault("max_batch", 1)
-        return cls(Session(**session_kwargs), graph)
+        return cls(Session(**session_kwargs), graph, **stream_kwargs)
 
     @property
     def kmax(self) -> int:
@@ -276,6 +306,11 @@ class StreamingTrussSession:
         self.metrics.inc("stream_updates")
         self.metrics.inc("stream_update_dispatches", dispatches)
         self.metrics.inc("stream_edges_repeeled", fr.size)
+        if (
+            self.checkpoint_dir is not None
+            and self.updates_applied % self.checkpoint_every == 0
+        ):
+            self._auto_checkpoint()
         return StreamUpdateResult(
             trussness=t_new,
             kmax=self.kmax,
@@ -288,6 +323,58 @@ class StreamingTrussSession:
         )
 
     # ------------------------------------------------------------------ #
+    # Crash durability (repro.resilience.checkpoint)
+    # ------------------------------------------------------------------ #
+    @property
+    def checkpoints_written(self) -> int:
+        return int(self.metrics.value("stream_checkpoints"))
+
+    def checkpoint(self, path: str) -> str:
+        """Serialize the committed state (CSR + trussness + triangle cache)
+        to ``path`` atomically; returns ``path``.  Restoring it
+        (:meth:`restore`) continues bit-identically to this session."""
+        from ..resilience.checkpoint import save_checkpoint  # lazy: no cycle
+
+        if self._pending is not None and self._pending._result is None:
+            raise RuntimeError(
+                "cannot checkpoint with an in-flight update; resolve it first"
+            )
+        out = save_checkpoint(
+            path,
+            graph=self.graph,
+            trussness=self.trussness,
+            tri_keys=self._tri_cache.tri_keys if self._tri_cache else None,
+            updates_applied=self.updates_applied,
+        )
+        self.metrics.inc("stream_checkpoints")
+        return out
+
+    def _auto_checkpoint(self) -> None:
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        self._ckpt_seq += 1
+        path = os.path.join(self.checkpoint_dir, f"ckpt-{self._ckpt_seq:08d}.npz")
+        self.checkpoint(path)
+        # Keep the newest two: a crash mid-write of checkpoint N still
+        # leaves N-1 intact (the write itself is atomic, this is belt
+        # and suspenders for partial-directory states).
+        kept = sorted(
+            f
+            for f in os.listdir(self.checkpoint_dir)
+            if f.startswith("ckpt-") and f.endswith(".npz")
+        )
+        for stale in kept[:-2]:
+            with contextlib.suppress(OSError):
+                os.unlink(os.path.join(self.checkpoint_dir, stale))
+
+    @classmethod
+    def restore(cls, path: str, session=None, **session_kwargs):
+        """Rebuild a session from a :meth:`checkpoint` file — no decompose
+        dispatch, no triangle re-enumeration (``resilience.restore_session``)."""
+        from ..resilience.checkpoint import restore_session  # lazy: no cycle
+
+        return restore_session(path, session=session, **session_kwargs)
+
+    # ------------------------------------------------------------------ #
     def stats(self) -> dict:
         return {
             "updates_applied": self.updates_applied,
@@ -298,4 +385,5 @@ class StreamingTrussSession:
             "cached_triangles": (
                 self._tri_cache.num_triangles if self._tri_cache else 0
             ),
+            "checkpoints_written": self.checkpoints_written,
         }

@@ -89,8 +89,14 @@ def triangles_incident(g: CSRGraph, keys: np.ndarray) -> np.ndarray:
 class TriangleCache:
     """The current graph's triangle list, maintained across updates."""
 
-    def __init__(self, g: CSRGraph):
+    def __init__(self, g: CSRGraph, *, tri_keys: np.ndarray | None = None):
         self.graph = g
+        if tri_keys is not None:
+            # Checkpoint restore (repro.resilience.checkpoint): adopt the
+            # serialized triangle list instead of re-enumerating — the
+            # restored session keeps the "one full enumeration" contract.
+            self.tri_keys = np.asarray(tri_keys, np.int64).reshape(-1, 3)
+            return
         # The one full enumeration this cache ever does.
         tri = edge_triangles(g)
         self.tri_keys = (

@@ -4,7 +4,8 @@ The property tests prefer the real hypothesis engine (shrinking, example
 databases, coverage-guided generation).  When it is not installed — the
 bare container only ships jax/numpy/pytest — the same test code runs
 against a tiny deterministic re-implementation of the strategy surface the
-suite actually uses (``integers``, ``lists``, ``tuples``, ``data``): each
+suite actually uses (``integers``, ``lists``, ``tuples``, ``sampled_from``,
+``data``): each
 ``@given`` test executes ``max_examples`` seeded draws, so property tests
 degrade to example-based tests instead of erroring at import time.
 
@@ -66,6 +67,11 @@ except ModuleNotFoundError:
             return _Strategy(
                 lambda rng: tuple(e.example(rng) for e in elements)
             )
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
 
         @staticmethod
         def data():

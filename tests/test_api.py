@@ -75,7 +75,13 @@ def test_api_surface_snapshot():
             "solve",
             "Session",
             "TrussFuture",
+            "TrussError",
+            "InvalidGraphError",
+            "CompileError",
+            "DeviceError",
+            "QueryFailedError",
             "TrussTimeoutError",
+            "CheckpointError",
             "Planner",
             "Plan",
             "PlannedBatch",
@@ -92,6 +98,7 @@ def test_api_surface_snapshot():
             "available_backends",
             "choose_backend",
             "default_kernel",
+            "fallback_backends",
             "Bucket",
             "bucket_for",
             "build_peel",
@@ -164,10 +171,12 @@ def test_different_backends_split_batches():
 # ------------------------------------------------------------------ #
 # (d) result(timeout=...) raises the named error with context
 # ------------------------------------------------------------------ #
-def test_future_timeout_named_error():
+def test_future_timeout_sheds_query_and_reclaims_slot():
+    """Timeout marks the query dead (default shed_on_timeout=True): its
+    queue slot is reclaimed — no leak — and batch-mates still resolve."""
     graphs = _same_bucket(lambda s: erdos(60, 5.0, seed=s), 2)
     s = Session(backend="fine/xla/aligned", max_batch=1, chunk=64)
-    s.submit(TrussQuery.kmax(graphs[0]))
+    f1 = s.submit(TrussQuery.kmax(graphs[0]))
     f2 = s.submit(TrussQuery.kmax(graphs[1]))
     with pytest.raises(TrussTimeoutError) as ei:
         f2.result(timeout=0)
@@ -175,17 +184,40 @@ def test_future_timeout_named_error():
     assert err.bucket == bucket_for(graphs[1], chunk=64)
     assert err.queue_depth == 2  # both queries were still queued
     assert err.request_id is not None
+    assert err.shed is True
     assert "queue_depth" in str(err) and isinstance(err, TimeoutError)
-    # The query is still queued and resolvable after the timeout.
-    assert f2.result(timeout=None) == int(
-        trussness_numpy(graphs[1]).max(initial=0)
+    # The dead query's slot was reclaimed; it re-raises, never re-runs.
+    assert len(s.queue) == 1
+    with pytest.raises(TrussTimeoutError):
+        f2.result(timeout=None)
+    assert s.stats()["queries_shed"] == 1
+    # The batch-mate is unaffected.
+    assert f1.result(timeout=None) == int(
+        trussness_numpy(graphs[0]).max(initial=0)
     )
     assert s.stats()["pending"] == 0
 
 
+def test_future_timeout_without_shedding_keeps_query_resolvable():
+    """shed_on_timeout=False is the legacy escape hatch: a timed-out query
+    stays queued and a later result() still resolves it."""
+    g = erdos(60, 5.0, seed=0)
+    s = Session(
+        backend="fine/xla/aligned", max_batch=1, chunk=64, shed_on_timeout=False
+    )
+    fut = s.submit(TrussQuery.kmax(g))
+    with pytest.raises(TrussTimeoutError) as ei:
+        fut.result(timeout=0)
+    assert ei.value.shed is False
+    assert fut.result(timeout=None) == int(trussness_numpy(g).max(initial=0))
+    assert s.stats()["queries_shed"] == 0
+
+
 def test_deadline_is_default_result_budget():
     g = erdos(60, 5.0, seed=0)
-    s = Session(backend="fine/xla/aligned", max_batch=1, chunk=64)
+    s = Session(
+        backend="fine/xla/aligned", max_batch=1, chunk=64, shed_on_timeout=False
+    )
     fut = s.submit(TrussQuery.kmax(g, deadline_s=0.0))
     with pytest.raises(TrussTimeoutError):
         fut.result()  # expired deadline is the default timeout

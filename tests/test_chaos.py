@@ -1,0 +1,155 @@
+"""Chaos suite: randomized fault storms against the batched peel path.
+
+Run directly via ``make test-chaos`` (3 fixed seeds) or as part of the
+full suite.  The contract under every storm is the same:
+
+* queries the faults do not touch resolve **bit-identically** to the
+  pure-numpy oracle — retries, backend fallback, and survivor
+  re-dispatch are invisible in the results;
+* queries a fault does hit raise exactly one typed error
+  (:class:`QueryFailedError` carrying the right ``query_id`` and cause);
+* the session survives and keeps serving afterwards.
+
+When ``CHAOS_METRICS_OUT`` is set (the Makefile/CI do this), the shared
+session's metrics snapshot — retries, fallbacks, quarantines, bisects,
+faults injected — is written there as JSON so CI can archive what the
+storm actually exercised.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api import QueryFailedError, Session, TrussQuery
+from repro.core import trussness_numpy
+from repro.graphs import erdos, rmat
+from repro.resilience import RetryPolicy, parse_faults
+
+SEEDS = (101, 202, 303)
+
+# site -> REPRO_FAULTS clause (seed appended per test).  All transient
+# (times=1) except poison, which is targeted separately below.
+STORMS = {
+    "none": None,
+    "dispatch": "dispatch:times=1",
+    "device_oom": "device_oom:times=1",
+    "compile": "compile:times=1",
+    "clock_skew": "clock_skew:times=1:skew=5.0",
+}
+
+
+@pytest.fixture(scope="module")
+def chaos_session():
+    s = Session(
+        backend="fine/xla/aligned",
+        max_batch=4,
+        chunk=64,
+        retry=RetryPolicy(backoff_base_s=0.0),
+    )
+    yield s
+    out = os.environ.get("CHAOS_METRICS_OUT")
+    if out:
+        with open(out, "w") as fh:
+            json.dump(s.stats(), fh, indent=2, sort_keys=True, default=str)
+
+
+def _graphs(seed, count=3):
+    return [erdos(50, 4.0, seed=seed + i) for i in range(count)]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("storm", sorted(STORMS))
+def test_transient_storms_resolve_bit_identical(chaos_session, storm, seed):
+    """One transient fault per batch: every query still matches the oracle."""
+    s = chaos_session
+    gs = _graphs(seed)
+    futs = [s.submit(TrussQuery.decompose(g)) for g in gs]
+    clause = STORMS[storm]
+    s.faults = parse_faults(f"{clause};seed={seed}") if clause else None
+    try:
+        s.flush()
+        for g, f in zip(gs, futs):
+            assert np.array_equal(f.result().trussness, trussness_numpy(g)), (
+                storm,
+                seed,
+                g.name,
+            )
+    finally:
+        s.faults = None
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_poison_storm_isolates_exactly_the_target(chaos_session, seed):
+    """A poisoned member fails alone; its batch-mates are untouched."""
+    s = chaos_session
+    gs = _graphs(seed)
+    futs = [s.submit(TrussQuery.decompose(g)) for g in gs]
+    target = futs[1].request.id
+    s.faults = parse_faults(f"poison:times=*:where.query={target};seed={seed}")
+    try:
+        s.flush()
+        with pytest.raises(QueryFailedError) as ei:
+            futs[1].result()
+        assert ei.value.query_id == target
+        assert ei.value.cause is not None and ei.value.cause.injected
+        for i in (0, 2):
+            assert np.array_equal(
+                futs[i].result().trussness, trussness_numpy(gs[i])
+            ), (seed, i)
+    finally:
+        s.faults = None
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_unlimited_oom_storm_fails_typed_then_session_recovers(
+    chaos_session, seed
+):
+    """A storm that never heals exhausts the whole chain: the query gets
+    one typed error (not a hang, not a bare RuntimeError), and the very
+    next fault-free batch serves normally."""
+    s = chaos_session
+    g = erdos(50, 4.0, seed=seed)
+    fut = s.submit(TrussQuery.decompose(g))
+    s.faults = parse_faults(f"device_oom:times=*;seed={seed}")
+    try:
+        s.flush()
+        with pytest.raises(QueryFailedError) as ei:
+            fut.result()
+        assert len(ei.value.backends_tried) >= 2  # the chain was walked
+    finally:
+        s.faults = None
+    dec = s.solve([TrussQuery.decompose(g)])[0]
+    assert np.array_equal(dec.trussness, trussness_numpy(g))
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    site=st.sampled_from(["dispatch", "device_oom", "compile", "clock_skew"]),
+    times=st.integers(min_value=1, max_value=2),
+)
+def test_random_storm_property(seed, site, times):
+    """Property form: for random (site, intensity, seed) storms on a fresh
+    session, results are either bit-identical to the oracle or a typed
+    QueryFailedError — never silent corruption."""
+    skew = ":skew=2.5" if site == "clock_skew" else ""
+    s = Session(
+        backend="fine/xla/aligned",
+        max_batch=2,
+        chunk=64,
+        retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0),
+        faults=parse_faults(f"{site}:times={times}{skew};seed={seed}"),
+    )
+    g = rmat(5, 4, seed=seed % 7)
+    fut = s.submit(TrussQuery.decompose(g))
+    s.flush()
+    try:
+        dec = fut.result()
+    except QueryFailedError as e:
+        assert e.query_id == fut.request.id
+        assert e.cause is not None
+    else:
+        assert np.array_equal(dec.trussness, trussness_numpy(g))

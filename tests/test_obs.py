@@ -32,6 +32,13 @@ SESSION_STATS_KEYS = {
     "deadline_misses",
     "pending",
     "device_time_s",
+    "retries",
+    "backend_fallbacks",
+    "queries_quarantined",
+    "batch_bisects",
+    "queries_failed",
+    "queries_shed",
+    "faults_injected",
     "cache_compiles",
     "cache_hits",
     "cache_hit_rate",
@@ -50,6 +57,7 @@ STREAM_STATS_KEYS = {
     "edges",
     "kmax",
     "cached_triangles",
+    "checkpoints_written",
 }
 
 SPAN_NAMES = {"solve", "plan", "pack", "compile", "dispatch", "device-wait", "unpack"}
@@ -214,12 +222,17 @@ def test_deadline_miss_on_fake_clock(graphs):
         assert fut.request.time_remaining() == pytest.approx(5.0)
         clock.advance(10.0)  # deadline blown without any wall time passing
         assert fut.request.time_remaining() == 0.0
-        with pytest.raises(TrussTimeoutError):
+        with pytest.raises(TrussTimeoutError) as ei:
             fut.result()  # default timeout = remaining deadline budget
         assert s.deadline_misses == 1
         assert s.stats()["deadline_misses"] == 1
-        # the query is still queued; an explicit waiver resolves it
-        assert fut.result(timeout=None) is not None
+        # shed_on_timeout (the default): the query was marked dead and its
+        # queue slot reclaimed; a later result() re-raises, never re-runs.
+        assert ei.value.shed is True
+        assert len(s.queue) == 0
+        assert s.stats()["queries_shed"] == 1
+        with pytest.raises(TrussTimeoutError):
+            fut.result(timeout=None)
 
 
 def test_remaining_is_the_one_deadline_rule():
