@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs lint
+.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs bench-kernels lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -43,6 +43,13 @@ bench-api:
 bench-obs:
 	$(PYTHON) -m benchmarks.obs_bench --smoke --out BENCH_obs.json \
 		--trace-out BENCH_trace_sample.json
+
+# Kernel benchmark -> BENCH_kernels.json (structural tile models + the
+# fused-vs-xla-vs-pallas speedup table per shape bucket, one autotuned
+# fused config each; smoke asserts a warm-path fused win on a skewed
+# bucket, fused/XLA bit-parity, and autotune-store replay).
+bench-kernels:
+	$(PYTHON) -m benchmarks.kernels_bench --smoke --out BENCH_kernels.json
 
 # Byte-compile gate (no extra tooling required) + ruff when available
 # (CI installs it via requirements-dev.txt; bare containers skip it).

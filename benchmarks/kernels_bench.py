@@ -1,4 +1,4 @@
-"""Kernel-level structural benchmarks (Fig. 4 analog for the TPU target).
+"""Kernel benchmarks: structural models + the fused megakernel sweep.
 
 This container has no TPU, so the Pallas kernels are profiled
 *structurally* (the §Perf methodology for kernels): per tile configuration
@@ -8,10 +8,24 @@ flagged).  The table shows why the fine-grained edge-tile kernel is the
 right TPU decomposition: its tiles are dense and uniform (lane efficiency
 1.0 by construction), while the coarse row decomposition's efficiency is
 the graph's lane-efficiency statistic.
+
+``run_fused_bench`` is the fused-vs-xla-vs-pallas speedup table per shape
+bucket (warm full decompose, one autotuned fused config per bucket): the
+fused megakernel's dead-tile skipping should beat the unfused Pallas
+backend wherever a batch is *skewed* — light members retire early and
+leave most edge tiles dead while the heavy member keeps peeling.  Smoke
+mode asserts exactly that claim on at least one skewed bucket, plus
+fused/XLA bit-parity and that the autotuned winner persisted and replays
+from a fresh store (the warm-start path).  `BENCH_kernels.json` carries
+all tables (CI uploads it like the peel/stream/api/obs artifacts).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -20,7 +34,12 @@ from repro.configs.ktruss import BENCH_GRAPHS
 from repro.core import KTrussEngine
 from repro.graphs import imbalance_stats
 
-__all__ = ["kernel_structure_rows", "run_kernel_bench"]
+__all__ = [
+    "kernel_structure_rows",
+    "run_kernel_bench",
+    "run_fused_bench",
+    "report",
+]
 
 _VPU_LANES = 8 * 128  # v5e VPU: 8 sublanes × 128 lanes
 _CLOCK = 0.94e9  # ~v5e clock
@@ -88,19 +107,191 @@ def run_kernel_bench():
     return rows
 
 
+# --------------------------------------------------------------------- #
+# Fused megakernel: per-bucket autotune + speedup table
+# --------------------------------------------------------------------- #
+def _pack_batch(graphs, *, chunk):
+    from repro.api.cache import bucket_for
+    from repro.graphs.pack import pack_problems
+
+    buckets = [bucket_for(g, chunk=chunk) for g in graphs]
+    n_pad = max(b.n_pad for b in buckets)
+    nnz_pad = max(b.nnz_pad for b in buckets)
+    window = max(b.window for b in buckets)
+    from repro.api.cache import Bucket
+
+    bucket = Bucket(n_pad=n_pad, nnz_pad=nnz_pad, window=window)
+    packed = pack_problems(
+        graphs,
+        slot_n=n_pad,
+        slot_nnz=nnz_pad,
+        slots=len(graphs),
+        chunk=chunk,
+        layout="aligned",
+    )
+    slot_ids = np.repeat(np.arange(len(graphs), dtype=np.int32), nnz_pad)
+    return bucket, packed, slot_ids
+
+
+def _time_peel(exe, problem, slot_ids, k0, repeats):
+    exe.peel(problem, slot_ids=slot_ids, k0=k0)  # warm (compile)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        st = exe.peel(problem, slot_ids=slot_ids, k0=k0)
+        np.asarray(st.done)
+        times.append(time.perf_counter() - t0)
+    return min(times), st
+
+
+def _fused_workloads(smoke: bool):
+    """(name, graphs, skewed) batches.
+
+    The skewed batches are the fused kernel's home turf: one heavy
+    R-MAT member next to light members that retire within a couple of
+    levels, leaving most edge tiles dead for most of the peel.
+    """
+    from repro.graphs import erdos, rmat
+
+    skew = [rmat(6, 8, seed=1)] + [erdos(20, 3.0, seed=s) for s in range(3)]
+    loads = [("rmat+light_skew", skew, True)]
+    if not smoke:
+        loads += [
+            ("rmat_pair_skew", [rmat(6, 8, seed=2), rmat(6, 2, seed=3)], True),
+            ("erdos_balanced", [erdos(64, 5.0, seed=s) for s in range(4)], False),
+        ]
+    return loads
+
+
+def run_fused_bench(smoke: bool = False, *, chunk: int = 64, repeats: int = 3):
+    """Fused-vs-xla-vs-pallas warm decompose per bucket, autotuned."""
+    from repro.exec.peel import PeelExecutor
+    from repro.kernels import autotune
+    from repro.kernels.autotune import AutotuneStore, FusedConfig
+
+    store_path = os.path.join(
+        tempfile.mkdtemp(prefix="bench-autotune-"), "autotune.json"
+    )
+    store = AutotuneStore(store_path)
+    candidates = autotune.candidate_configs(
+        2**30,
+        blocks=(32, 64) if smoke else (32, 64, 128),
+        schedules=("compare", "bsearch"),
+    )
+    rows = []
+    for name, graphs, skewed in _fused_workloads(smoke):
+        bucket, packed, slot_ids = _pack_batch(graphs, chunk=chunk)
+        slots = packed.slots
+        k0 = np.full(slots, 3, np.int32)
+        cfg, sweep = autotune.autotune_fused(
+            bucket,
+            slots,
+            graphs=graphs,
+            chunk=chunk,
+            candidates=[c.clamp(bucket.nnz_pad) for c in candidates],
+            repeats=max(1, repeats - 1),
+            store=store,
+        )
+        # The replay path a warm process takes: a FRESH store instance
+        # must hand back the persisted winner.
+        replayed = AutotuneStore(store_path).get(bucket, slots)
+        assert replayed == cfg, f"autotune replay mismatch: {replayed} != {cfg}"
+
+        xla = PeelExecutor(
+            granularity="fine", mode="owner", backend="xla",
+            window=bucket.window, chunk=chunk,
+        )
+        pallas = PeelExecutor(
+            granularity="fine", mode="owner", backend="pallas",
+            window=bucket.window, chunk=chunk,
+        )
+        fused = PeelExecutor(
+            backend="fused", window=bucket.window, chunk=chunk, fused_config=cfg
+        )
+        xla_s, st_x = _time_peel(xla, packed.problem, slot_ids, k0, repeats)
+        pallas_s, _ = _time_peel(pallas, packed.problem, slot_ids, k0, repeats)
+        fused_s, st_f = _time_peel(fused, packed.problem, slot_ids, k0, repeats)
+        assert np.array_equal(
+            np.asarray(st_x.trussness), np.asarray(st_f.trussness)
+        ), f"fused/xla parity broke on {name}"
+        rows.append(
+            {
+                "batch": name,
+                "bucket": f"n{bucket.n_pad}-nnz{bucket.nnz_pad}-w{bucket.window}",
+                "slots": slots,
+                "skewed": skewed,
+                "xla_ms": round(xla_s * 1e3, 2),
+                "pallas_ms": round(pallas_s * 1e3, 2),
+                "fused_ms": round(fused_s * 1e3, 2),
+                "fused_vs_pallas": round(pallas_s / fused_s, 2),
+                "fused_vs_xla": round(xla_s / fused_s, 2),
+                "config": cfg.to_json(),
+                "sweep": sweep,
+            }
+        )
+    result = {
+        "rows": rows,
+        "autotune_store": json.load(open(store_path)),
+        "note": "interpret-mode (CPU emulation, not TPU wall-clock)",
+    }
+    if smoke:
+        assert any(
+            r["skewed"] and r["fused_vs_pallas"] > 1.0 for r in rows
+        ), f"fused showed no warm-path win on any skewed bucket: {rows}"
+        # replay must also round-trip the default-config distinction
+        assert result["autotune_store"]["configs"], "autotune store is empty"
+        _ = FusedConfig  # keep the import local to this path
+    return result
+
+
+def report(result: dict) -> None:
+    cols = (
+        "batch", "bucket", "slots", "skewed",
+        "xla_ms", "pallas_ms", "fused_ms", "fused_vs_pallas", "fused_vs_xla",
+    )
+    print(",".join(cols))
+    for r in result["rows"]:
+        print(",".join(str(r[c]) for c in cols))
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small sweep + asserts")
+    ap.add_argument("--out", default=None, help="write BENCH_kernels.json here")
+    args = ap.parse_args()
+
     print("# structural model (v5e)")
-    rows = kernel_structure_rows()
-    cols = list(rows[0].keys())
+    structural = kernel_structure_rows()
+    cols = list(structural[0].keys())
     print(",".join(cols))
-    for r in rows:
+    for r in structural:
         print(",".join(str(r[c]) for c in cols))
-    print("# interpret-mode end-to-end")
-    rows = run_kernel_bench()
-    cols = list(rows[0].keys())
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[c]) for c in cols))
+
+    interpret = []
+    if not args.smoke:
+        print("# interpret-mode end-to-end")
+        interpret = run_kernel_bench()
+        cols = list(interpret[0].keys())
+        print(",".join(cols))
+        for r in interpret:
+            print(",".join(str(r[c]) for c in cols))
+
+    print("# fused megakernel vs unfused (warm decompose, autotuned)")
+    fused = run_fused_bench(smoke=args.smoke)
+    report(fused)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(
+                {
+                    "structural": structural,
+                    "interpret": interpret,
+                    "fused": fused,
+                },
+                f,
+                indent=2,
+            )
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

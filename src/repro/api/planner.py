@@ -177,6 +177,15 @@ class Planner:
                 f"backend {self.backend} has layout={self.backend.layout!r}, "
                 "but mesh sharding needs layout='aligned'"
             )
+        if (
+            mesh is not None
+            and self.backend is not None
+            and self.backend.kernel == "fused"
+        ):
+            raise ValueError(
+                f"backend {self.backend} keeps peel state kernel-resident "
+                "and cannot shard across a mesh; use fine/pallas/aligned"
+            )
         self._slot_ids: dict[tuple[int, int], Any] = {}
         # Observability: planning overhead + which backend each bucket got.
         self.queries_planned = 0
@@ -205,6 +214,11 @@ class Planner:
                     kernel=self.kernel,
                     layout=self.layout,
                 )
+                if self.mesh is not None and key.kernel == "fused":
+                    # The auto rule upgraded to the kernel-resident
+                    # megakernel, but a mesh session must shard: step
+                    # down to the unfused Pallas twin (bit-identical).
+                    key = BackendKey(key.formulation, "pallas", key.layout)
             else:
                 key = get_backend(key).key
             if self.mesh is not None and key.layout != "aligned":
@@ -214,6 +228,11 @@ class Planner:
                 raise ValueError(
                     f"backend {key} has layout={key.layout!r}, but mesh "
                     "sharding needs layout='aligned'"
+                )
+            if self.mesh is not None and key.kernel == "fused":
+                raise ValueError(
+                    f"backend {key} keeps peel state kernel-resident and "
+                    "cannot shard across a mesh; use fine/pallas/aligned"
                 )
             span.attrs["backend"] = str(key)
         dt = obs_clock.now() - t0
@@ -259,19 +278,46 @@ class Planner:
     # ------------------------------------------------------------------ #
     # Lowering: batch -> one device dispatch -> per-query results
     # ------------------------------------------------------------------ #
-    def cache_variant(self, backend: BackendKey):
-        """What beyond (bucket, slots) specializes the executable."""
-        return (backend, self.mode, self._mesh_key)
+    def cache_variant(
+        self,
+        backend: BackendKey,
+        bucket: Bucket | None = None,
+        slots: int | None = None,
+    ):
+        """What beyond (bucket, slots) specializes the executable.
+
+        Fused backends fold the bucket's autotuned kernel config
+        (``repro.kernels.autotune.lookup``) into the key, so a newly
+        tuned block/schedule compiles its own executable instead of
+        silently reusing a stale one."""
+        if backend.kernel == "fused" and bucket is not None:
+            cfg = self.fused_config_for(bucket, slots or self.max_batch)
+            return (backend, self.mode, self._mesh_key, cfg.signature())
+        return (backend, self.mode, self._mesh_key, None)
+
+    def fused_config_for(self, bucket: Bucket, slots: int):
+        """The fused tuning point for one (bucket, slots): the persisted
+        autotune winner when one exists, the stock default otherwise —
+        always clamped so the block divides the bucket's slot width."""
+        from ..kernels import autotune
+
+        return autotune.lookup(bucket, slots).clamp(bucket.nnz_pad)
 
     def build_executor(self, key: tuple[Bucket, int, Any]):
         """Compile-cache builder: one peel executor per cache key."""
-        bucket, _slots, (backend, mode, _mesh_key) = key
+        bucket, _slots, (backend, mode, _mesh_key, fused_sig) = key
+        fused_config = None
+        if fused_sig is not None:
+            from ..kernels.autotune import FusedConfig
+
+            fused_config = FusedConfig.from_signature(fused_sig)
         return get_backend(backend).make_executor(
             window=bucket.window,
             chunk=self.chunk,
             max_iters=self.max_iters,
             mesh=self.mesh,
             mode=mode,
+            fused_config=fused_config,
         )
 
     def _slot_ids_for(self, batch: PlannedBatch, edge_ranges) -> np.ndarray:
@@ -335,7 +381,9 @@ class Planner:
         pack_dt = obs_clock.now() - t0
         with tracer.span("compile", backend=str(backend)) as span:
             inject("compile", bucket=bucket, backend=str(backend), queries=qids)
-            exe, hit = cache.get(bucket, batch.slots, self.cache_variant(backend))
+            exe, hit = cache.get(
+                bucket, batch.slots, self.cache_variant(backend, bucket, batch.slots)
+            )
             span.attrs["hit"] = hit
         for st in queries:
             st.stats.pack_time_s = pack_dt

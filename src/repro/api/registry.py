@@ -10,9 +10,13 @@ flag smeared across entry points:
 
 * ``formulation`` — ``coarse`` (row tasks) | ``fine`` (nonzero tasks);
 * ``kernel``      — ``xla`` (fused scatter/gather ops) | ``pallas``
-                    (hand-written TPU kernels, interpret-mode on CPU);
+                    (hand-written TPU kernels, interpret-mode on CPU) |
+                    ``fused`` (persistent Pallas peel megakernel: one
+                    launch per truss level, autotuned per bucket);
 * ``layout``      — ``contig`` (prefix-sum packed lanes) | ``aligned``
-                    (slot-aligned lanes, shardable across a mesh).
+                    (slot-aligned lanes, shardable across a mesh; the
+                    only layout whose slot-banded lane geometry the fused
+                    megakernel can tile).
 
 Every registered backend is *semantically identical* — bit-identical
 ``trussness`` on any graph (parity-tested in ``tests/test_api.py``) — so
@@ -43,7 +47,7 @@ __all__ = [
 ]
 
 FORMULATIONS = ("coarse", "fine")
-KERNELS = ("xla", "pallas")
+KERNELS = ("xla", "pallas", "fused")
 LAYOUTS = ("contig", "aligned")
 
 
@@ -81,10 +85,13 @@ class BackendSpec:
         max_iters: int | None = None,
         mesh=None,
         mode: str | None = None,
+        fused_config=None,
     ):
         """Build this backend's :class:`repro.exec.PeelExecutor` for one
         shape bucket.  ``mode`` overrides the spec's dataflow (the legacy
-        ``TrussService(mode=...)`` knob)."""
+        ``TrussService(mode=...)`` knob); ``fused_config`` is the
+        ``kernel="fused"`` tuning point (``repro.kernels.autotune``),
+        ignored by the other kernels."""
         from ..exec.peel import PeelExecutor  # lazy: registry stays import-light
 
         return PeelExecutor(
@@ -96,6 +103,7 @@ class BackendSpec:
             row_chunk=row_chunk,
             max_iters=max_iters,
             mesh=mesh,
+            fused_config=fused_config,
         )
 
 
@@ -167,14 +175,27 @@ def choose_backend(
       coarse  iff  coarse_lane_efficiency >= 0.4 and coarse_imbalance <= 2.5
 
     (the road-network regime, where the paper measures fine/coarse ≈ 1×),
-    otherwise fine.  The Pallas kernels
-    implement the fine formulation only, so ``kernel="pallas"`` forces
-    ``fine``.  Every backend returns identical results, so a wrong guess
-    costs time, never correctness.
+    otherwise fine.  The Pallas and fused kernels
+    implement the fine formulation only, so ``kernel="pallas"`` or
+    ``"fused"`` forces ``fine``.  On the hand-kernel path
+    (``kernel="pallas"``, the TPU default) a *heavily* imbalanced bucket
+    (``coarse_imbalance > 8``) is upgraded to the fused megakernel when
+    its aligned variant is registered: a heavy degree tail means long
+    peel tails with mostly-dead lanes, which is exactly the regime the
+    fused kernel's dead-tile skipping pays in (its per-bucket autotuned
+    configs come from ``repro.kernels.autotune``).  Every backend returns
+    identical results, so a wrong guess costs time, never correctness.
     """
     kernel = kernel or default_kernel()
     balanced = stats.coarse_lane_efficiency >= 0.4 and stats.coarse_imbalance <= 2.5
-    formulation = "coarse" if (balanced and kernel != "pallas") else "fine"
+    formulation = "coarse" if (balanced and kernel not in ("pallas", "fused")) else "fine"
+    if (
+        kernel == "pallas"
+        and layout == "aligned"
+        and stats.coarse_imbalance > 8.0
+        and BackendKey("fine", "fused", layout) in _REGISTRY
+    ):
+        kernel = "fused"
     key = BackendKey(formulation, kernel, layout)
     if key not in _REGISTRY:
         raise KeyError(f"auto-chosen backend {key} is not registered")
@@ -190,16 +211,21 @@ def fallback_backends(key: Union[BackendKey, str, tuple]) -> tuple[BackendKey, .
     at a time and **preserves the layout** (a mesh session requires
     ``aligned``; re-packing stays shape-compatible):
 
-    1. ``pallas -> xla`` — same formulation, same layout: a hand-written
-       kernel that fails to build still has the fused-ops twin;
-    2. ``fine -> coarse`` on ``xla`` — the row-task formulation as the
+    1. ``fused -> pallas`` — same formulation, same layout: the
+       megakernel that fails to build still has the unfused per-step
+       Pallas twin;
+    2. ``pallas -> xla`` — same formulation, same layout: a hand-written
+       kernel that fails to build still has the XLA-ops twin;
+    3. ``fine -> coarse`` on ``xla`` — the row-task formulation as the
        last resort (slower under imbalance, but always compilable).
 
     Only registered keys are returned, and never ``key`` itself.
     """
     key = get_backend(key).key
     chain: list[BackendKey] = []
-    if key.kernel == "pallas":
+    if key.kernel == "fused":
+        chain.append(BackendKey(key.formulation, "pallas", key.layout))
+    if key.kernel in ("pallas", "fused"):
         chain.append(BackendKey(key.formulation, "xla", key.layout))
     if key.formulation == "fine":
         chain.append(BackendKey("coarse", "xla", key.layout))
@@ -229,6 +255,20 @@ def _register_defaults() -> None:
                 description="nonzero tasks, collision-free Pallas TPU kernel",
             )
         )
+    # The fused megakernel tiles the aligned layout's slot-banded lane
+    # geometry; there is no contig variant (a contig pack interleaves
+    # members' lanes, which its per-slot reductions cannot reshape).
+    register_backend(
+        BackendSpec(
+            key=BackendKey("fine", "fused", "aligned"),
+            mode="owner",
+            description=(
+                "persistent fused Pallas peel megakernel: support + prune + "
+                "level bookkeeping in one launch per level, autotuned per "
+                "bucket (repro.kernels.autotune)"
+            ),
+        )
+    )
 
 
 _register_defaults()

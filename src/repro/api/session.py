@@ -423,7 +423,9 @@ class Session:
         exe, _ = self.cache.get(
             bucket,
             self.planner.max_batch,
-            self.planner.cache_variant(self.planner.backend),
+            self.planner.cache_variant(
+                self.planner.backend, bucket, self.planner.max_batch
+            ),
         )
         return exe
 

@@ -1,0 +1,358 @@
+"""Fused persistent peel megakernel: one Pallas launch per truss level.
+
+The unfused Pallas backend mirrors the XLA formulation — per while-loop
+trip it re-gathers (E, W) neighbor windows in XLA, calls the intersection
+kernel over *every* edge tile, and returns to HBM for the prune — so a
+level costs several full passes over the packed problem even when most
+lanes are long dead.  PKT's observation is that the whole level peel is
+one synchronized parallel region; this kernel is that formulation: a
+single ``pl.pallas_call`` (no grid — one persistent program holding the
+whole packed problem in kernel memory) runs support computation, the
+per-slot threshold compare, and the edge-removal scatter to a fixed
+point, with the frontier (``alive``) and per-slot ``cur_k``/``done``
+state living in on-chip refs for the entire level.  The host dispatches
+one kernel per level instead of one support + one prune round-trip per
+*iteration*.
+
+Being resident pays twice:
+
+- **Dead-block skipping** — edge lanes are tiled by ``block`` and a tile
+  with no free alive lane is skipped via ``lax.cond`` (its window
+  gathers and intersections never execute).  Retired slots of an
+  imbalanced batch and the long tail of late peel levels are exactly
+  where most tiles are dead — the unfused path pays full price there.
+- **No HBM round-trips inside a level** — the support→prune→converge
+  loop is ``lax.while_loop`` *inside* the kernel over on-chip state.
+
+Bit-identity with the XLA/unfused peel is structural: slots are
+block-diagonal and independent, supports are exact integer counts, and
+the per-slot iteration/level bookkeeping below replays ``build_peel``'s
+trajectory per slot (a per-slot convergence latch counts exactly the
+trips the unfused loop would have counted).  ``block`` and ``schedule``
+are the autotuned knobs (``repro.kernels.autotune``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..exec.peel import PeelState
+from .ops import on_tpu
+
+__all__ = ["make_fused_level"]
+
+_LANES = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _intersect_compare(a_nav, a_ok, b_nav, b_ok):
+    """Chunked O(W²) broadcast-equality count (VPU slab schedule)."""
+    w = a_nav.shape[1]
+    found = jnp.zeros(a_nav.shape, jnp.bool_)
+    for c0 in range(0, w, _LANES):
+        bn = b_nav[:, c0 : c0 + _LANES]
+        bo = b_ok[:, c0 : c0 + _LANES]
+        eq = (a_nav[:, :, None] == bn[:, None, :]) & bo[:, None, :]
+        found |= jnp.any(eq, axis=2)
+    return jnp.sum((found & a_ok).astype(jnp.int32), axis=1)
+
+
+def _intersect_bsearch(a_nav, a_ok, b_nav, b_ok):
+    """Branchless binary-search count — needs strictly ascending b rows."""
+    w = b_nav.shape[1]
+    lo = jnp.zeros(a_nav.shape, jnp.int32)
+    hi = jnp.full(a_nav.shape, w, jnp.int32)
+    big = jnp.iinfo(b_nav.dtype).max
+    for _ in range(max(1, int(np.ceil(np.log2(w + 1))))):
+        mid = (lo + hi) >> 1
+        bm = jnp.take_along_axis(
+            b_nav, jnp.clip(mid, 0, w - 1), axis=1, mode="clip"
+        )
+        bm = jnp.where(mid >= w, big, bm)
+        go_right = bm < a_nav
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    safe = jnp.minimum(lo, w - 1)
+    hit = jnp.take_along_axis(b_nav, safe, axis=1, mode="clip") == a_nav
+    hit &= jnp.take_along_axis(b_ok, safe, axis=1, mode="clip") & a_ok & (lo < w)
+    return jnp.sum(hit.astype(jnp.int32), axis=1)
+
+
+def _level_kernel(
+    # problem refs
+    colidx_ref,
+    edge_row_ref,
+    urowptr_ref,
+    ucolidx_ref,
+    u2d_ref,
+    udeg_ref,
+    # peel-state refs (bools as int32)
+    alive_ref,
+    truss_ref,
+    cur_k_ref,
+    kmax_ref,
+    levels_ref,
+    iters_ref,
+    done_ref,
+    edges_ref,
+    titers_ref,
+    # frozen-lane refs
+    frozen_ref,
+    ftruss_ref,
+    single_ref,
+    # outputs
+    o_alive,
+    o_supp,
+    o_truss,
+    o_cur_k,
+    o_kmax,
+    o_levels,
+    o_iters,
+    o_done,
+    o_titers,
+    o_edges,
+    *,
+    block: int,
+    w: int,
+    slot_nnz: int,
+    num_slots: int,
+    schedule: str,
+    inner_limit: int,
+):
+    colidx = colidx_ref[...]
+    edge_row = edge_row_ref[...]
+    urowptr = urowptr_ref[...]
+    ucolidx = ucolidx_ref[...]
+    u2d = u2d_ref[...]
+    udeg = udeg_ref[...]
+    truss = truss_ref[...]
+    cur_k = cur_k_ref[...]
+    done = done_ref[...] != 0
+    frozen = frozen_ref[...] != 0
+    ftruss = ftruss_ref[...]
+    single = single_ref[...] != 0
+
+    nnzp = colidx.shape[0]
+    unnzp = ucolidx.shape[0]
+    large = jnp.int32((urowptr.shape[0] - 1) + 2)  # p.n + 2 sentinel
+    offs = jnp.arange(w, dtype=jnp.int32)[None, :]
+    cur_k_lane = jnp.repeat(cur_k, slot_nnz)
+    # The threshold is fixed for the whole level, so the frozen lanes'
+    # effective-alive contribution is too — computed once per launch.
+    frozen_live = frozen & (ftruss >= cur_k_lane)
+    intersect = _intersect_compare if schedule == "compare" else _intersect_bsearch
+
+    def row_window(v, ualive):
+        start = urowptr[jnp.maximum(v, 1) - 1] * (v > 0)
+        idx = start[:, None] + offs
+        n_in = offs < udeg[v][:, None]
+        idx_c = jnp.clip(idx, 0, unnzp - 1)
+        nav = jnp.where(n_in, ucolidx[idx_c], large)
+        return nav, n_in & ualive[idx_c]
+
+    def support_of(alive_free):
+        eff = alive_free | frozen_live
+        eff_pad = jnp.concatenate([eff, jnp.zeros((1,), jnp.bool_)])
+        ualive = eff_pad[jnp.minimum(u2d, nnzp)] & (ucolidx != 0)
+
+        def blk(i, s_acc):
+            at = i * block
+            alive_blk = jax.lax.dynamic_slice(alive_free, (at,), (block,))
+
+            def compute(_):
+                a = jax.lax.dynamic_slice(edge_row, (at,), (block,))
+                b = jax.lax.dynamic_slice(colidx, (at,), (block,))
+                eff_blk = jax.lax.dynamic_slice(eff, (at,), (block,))
+                valid_t = (b != 0) & eff_blk
+                a_nav, a_al = row_window(a, ualive)
+                b_nav, b_al = row_window(b, ualive)
+                a_ok = a_al & valid_t[:, None] & (a_nav < large)
+                counts = intersect(a_nav, a_ok, b_nav, b_al)
+                return counts * valid_t.astype(jnp.int32)
+
+            # The fused win: a tile with no *free* alive lane contributes
+            # nothing downstream (outputs are masked by the next alive
+            # set, which only shrinks), so its gathers + intersection are
+            # skipped outright.  Retired slots and late-level tails make
+            # most tiles dead — the unfused path still pays for them.
+            counts = jax.lax.cond(
+                jnp.any(alive_blk),
+                compute,
+                lambda _: jnp.zeros((block,), jnp.int32),
+                operand=None,
+            )
+            return jax.lax.dynamic_update_slice(s_acc, counts, (at,))
+
+        return jax.lax.fori_loop(
+            0, nnzp // block, blk, jnp.zeros((nnzp,), jnp.int32)
+        )
+
+    # Support → prune to this level's fixed point without leaving the
+    # kernel.  Per-slot latch replays build_peel's bookkeeping exactly:
+    # a live slot counts one iteration per trip until the trip where none
+    # of its lanes changed (its convergence trip), then waits uncounted —
+    # in the unfused trajectory it would already be peeling its next
+    # level, whose trips the next launch counts instead.
+    def fcond(carry):
+        _alive_c, _s, latch, _iters_c, trips = carry
+        return jnp.any(~latch & ~done) & (trips < inner_limit)
+
+    def fbody(carry):
+        alive_c, _s, latch, iters_c, trips = carry
+        s = support_of(alive_c)
+        new_alive = alive_c & (s >= cur_k_lane - 2)
+        changed = (
+            (new_alive ^ alive_c)
+            .astype(jnp.int32)
+            .reshape(num_slots, slot_nnz)
+            .sum(axis=1)
+        )
+        live = ~latch & ~done
+        iters_c = iters_c + live.astype(jnp.int32)
+        latch = latch | (live & (changed == 0))
+        return new_alive, s, latch, iters_c, trips + jnp.int32(1)
+
+    alive0 = alive_ref[...] != 0
+    carry = (
+        alive0,
+        jnp.zeros((nnzp,), jnp.int32),
+        jnp.zeros((num_slots,), jnp.bool_),
+        iters_ref[...],
+        jnp.int32(0),
+    )
+    alive_fp, s_fp, latch, iters_new, trips = jax.lax.while_loop(
+        fcond, fbody, carry
+    )
+
+    # Level bookkeeping — the same algebra as build_peel's converged
+    # branch, applied once per launch.
+    converged = latch & ~done
+    conv_lane = jnp.repeat(converged, slot_nnz)
+    truss_new = jnp.where(conv_lane & alive_fp, cur_k_lane, truss)
+    left = alive_fp.astype(jnp.int32).reshape(num_slots, slot_nnz).sum(axis=1)
+    nonempty = left > 0
+    retired = converged & (~nonempty | single)
+    cur_k_new = jnp.where(converged & ~retired, cur_k + 1, cur_k)
+    # Prune-ahead against the advanced threshold with the support in hand
+    # (identical reasoning to build_peel: support is monotone in alive).
+    alive_next = alive_fp & (s_fp >= jnp.repeat(cur_k_new, slot_nnz) - 2)
+
+    o_alive[...] = alive_next.astype(jnp.int32)
+    o_supp[...] = s_fp * alive_next.astype(jnp.int32)
+    o_truss[...] = truss_new
+    o_cur_k[...] = cur_k_new
+    o_kmax[...] = jnp.where(converged & nonempty, cur_k, kmax_ref[...])
+    o_levels[...] = levels_ref[...] + converged.astype(jnp.int32)
+    o_iters[...] = iters_new
+    o_done[...] = (done | retired).astype(jnp.int32)
+    o_titers[...] = titers_ref[...] + trips
+    o_edges[...] = jnp.where(done, edges_ref[...], left)
+
+
+def make_fused_level(
+    *,
+    window: int,
+    block: int = 128,
+    schedule: str = "compare",
+    interpret: bool | None = None,
+):
+    """Build the jitted one-launch-per-level step for one configuration.
+
+    Returns ``level_step(p, state, frozen, frozen_truss, single_level) ->
+    PeelState`` advancing every live slot by exactly one truss level in a
+    single ``pl.pallas_call``.  ``window`` must cover the bucket's max
+    undirected degree; ``block`` must divide the packed ``slot_nnz``
+    (validated here and, with slot attribution, by
+    ``graphs.pack.validate_fused_tiling``).
+    """
+    if schedule not in ("compare", "bsearch"):
+        raise ValueError(f"unknown fused schedule {schedule!r}")
+    if block < 1 or (block & (block - 1)) != 0:
+        raise ValueError(f"fused block must be a power of two, got {block}")
+    run_interpret = (not on_tpu()) if interpret is None else interpret
+    w = _round_up(max(int(window), _LANES), _LANES)
+
+    @jax.jit
+    def level_step(p, state, frozen, frozen_truss, single_level):
+        nnzp = int(p.colidx.shape[0])
+        num_slots = int(state.cur_k.shape[0])
+        if num_slots < 1 or nnzp % num_slots:
+            raise ValueError(
+                f"nnz_pad={nnzp} does not split into {num_slots} slots"
+            )
+        slot_nnz = nnzp // num_slots
+        if slot_nnz % block:
+            raise ValueError(
+                f"fused block={block} does not divide slot_nnz={slot_nnz}"
+            )
+        kernel = functools.partial(
+            _level_kernel,
+            block=block,
+            w=w,
+            slot_nnz=slot_nnz,
+            num_slots=num_slots,
+            schedule=schedule,
+            # Per level a live slot prunes >= 1 of its <= slot_nnz free
+            # lanes per trip until its convergence trip: provable cap.
+            inner_limit=slot_nnz + 2,
+        )
+        shp = jax.ShapeDtypeStruct
+        i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+        outs = pl.pallas_call(
+            kernel,
+            out_shape=[
+                shp((nnzp,), jnp.int32),  # alive
+                shp((nnzp,), jnp.int32),  # support
+                shp((nnzp,), jnp.int32),  # trussness
+                shp((num_slots,), jnp.int32),  # cur_k
+                shp((num_slots,), jnp.int32),  # kmax
+                shp((num_slots,), jnp.int32),  # levels
+                shp((num_slots,), jnp.int32),  # iters
+                shp((num_slots,), jnp.int32),  # done
+                shp((1,), jnp.int32),  # total_iters
+                shp((num_slots,), jnp.int32),  # edges_alive
+            ],
+            interpret=run_interpret,
+        )(
+            p.colidx,
+            p.edge_row,
+            p.urowptr,
+            p.ucolidx,
+            p.u2d,
+            p.udeg,
+            i32(state.alive),
+            state.trussness,
+            state.cur_k,
+            state.kmax,
+            state.levels,
+            state.iters,
+            i32(state.done),
+            state.edges_alive,
+            jnp.reshape(state.total_iters, (1,)),
+            i32(frozen),
+            frozen_truss,
+            i32(single_level),
+        )
+        alive, supp, truss, cur_k, kmax, levels, iters, done, titers, edges = outs
+        return PeelState(
+            alive=alive != 0,
+            support=supp,
+            trussness=truss,
+            cur_k=cur_k,
+            kmax=kmax,
+            levels=levels,
+            iters=iters,
+            done=done != 0,
+            total_iters=titers[0],
+            edges_alive=edges,
+        )
+
+    return level_step

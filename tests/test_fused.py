@@ -1,0 +1,366 @@
+"""Fused peel megakernel: parity, tiling validation, and autotuning.
+
+The fused backend (`fine/fused/aligned`) must be bit-identical to the
+XLA peel on every PeelState field — including the per-slot iteration
+trajectory — because its per-level kernel replays `build_peel`'s
+bookkeeping exactly (slots are block-diagonal and independent).  The
+autotune store must round-trip winning configs across processes so a
+warm server replays them instead of re-sweeping.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import Session, TrussQuery, solve
+from repro.api.cache import bucket_for
+from repro.api.registry import BackendKey, choose_backend
+from repro.core import trussness_numpy
+from repro.errors import InvalidGraphError
+from repro.exec.peel import PeelExecutor
+from repro.graphs import barabasi, erdos, rmat
+from repro.graphs.pack import pack_problems, validate_fused_tiling
+from repro.graphs.stats import ImbalanceStats
+from repro.kernels.autotune import (
+    AutotuneStore,
+    FusedConfig,
+    autotune_fused,
+    candidate_configs,
+    lookup,
+)
+
+CHUNK = 64
+
+
+def _packed_batch(graphs):
+    buckets = [bucket_for(g, chunk=CHUNK) for g in graphs]
+    n_pad = max(b.n_pad for b in buckets)
+    nnz_pad = max(b.nnz_pad for b in buckets)
+    window = max(b.window for b in buckets)
+    slots = len(graphs)
+    packed = pack_problems(
+        graphs,
+        slot_n=n_pad,
+        slot_nnz=nnz_pad,
+        slots=slots,
+        chunk=CHUNK,
+        layout="aligned",
+    )
+    slot_ids = np.repeat(np.arange(slots, dtype=np.int32), nnz_pad)
+    return packed, slot_ids, window
+
+
+_STATE_FIELDS = (
+    "alive", "support", "trussness", "cur_k", "kmax",
+    "levels", "iters", "done", "edges_alive",
+)
+
+
+def _assert_states_equal(st_a, st_b):
+    for field in _STATE_FIELDS:
+        a = np.asarray(getattr(st_a, field))
+        b = np.asarray(getattr(st_b, field))
+        assert np.array_equal(a, b), f"{field}: {a} != {b}"
+
+
+# --------------------------------------------------------------------- #
+# (a) Executor-level bit-identity, both schedules
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("schedule", ["compare", "bsearch"])
+def test_fused_executor_bit_identical_to_xla(schedule):
+    graphs = [rmat(5, 6, seed=1), barabasi(30, 3, seed=0)]
+    packed, slot_ids, window = _packed_batch(graphs)
+    k0 = np.full(packed.slots, 3, np.int32)
+
+    xla = PeelExecutor(
+        granularity="fine", mode="owner", backend="xla",
+        window=window, chunk=CHUNK,
+    )
+    st_x = xla.peel(packed.problem, slot_ids=slot_ids, k0=k0)
+
+    fused = PeelExecutor(
+        backend="fused", window=window, chunk=CHUNK,
+        fused_config=FusedConfig(block=32, schedule=schedule),
+    )
+    st_f = fused.peel(packed.problem, slot_ids=slot_ids, k0=k0)
+    _assert_states_equal(st_x, st_f)
+    assert fused.dispatches == 1  # the whole peel is still ONE dispatch
+
+
+def test_fused_frozen_lanes_bit_identical_to_xla():
+    """The streaming form: half the lanes frozen at their known
+    trussness, the rest re-peeled — fused must match the unfused peel
+    bit-for-bit and both must land on the oracle."""
+    g = rmat(5, 6, seed=3)
+    oracle = trussness_numpy(g)
+    packed, slot_ids, window = _packed_batch([g])
+    p = packed.problem
+    colidx = np.asarray(p.colidx)
+    real = colidx != 0
+    lanes = np.arange(colidx.shape[0])
+    frozen = real & (lanes % 2 == 0)
+    alive0 = real & ~frozen
+    frozen_truss = np.zeros(colidx.shape[0], np.int32)
+    frozen_truss[: oracle.shape[0]] = np.where(
+        frozen[: oracle.shape[0]], oracle, 0
+    )
+    kwargs = dict(
+        slot_ids=slot_ids,
+        k0=np.array([3], np.int32),
+        alive0=alive0,
+        frozen=frozen,
+        frozen_truss=frozen_truss,
+    )
+    st_x = PeelExecutor(
+        granularity="fine", mode="owner", backend="xla",
+        window=window, chunk=CHUNK,
+    ).peel(p, **kwargs)
+    st_f = PeelExecutor(backend="fused", window=window, chunk=CHUNK).peel(
+        p, **kwargs
+    )
+    _assert_states_equal(st_x, st_f)
+    assert np.array_equal(
+        np.asarray(st_f.trussness)[: oracle.shape[0]], oracle
+    )
+
+
+def test_fused_solve_matches_xla_across_workloads():
+    g = barabasi(60, 4, seed=1)
+    queries = lambda: [  # noqa: E731
+        TrussQuery.ktruss(g, k=3),
+        TrussQuery.kmax(g),
+        TrussQuery.decompose(g),
+    ]
+    ref = solve(queries(), backend="fine/xla/aligned", chunk=CHUNK, max_batch=4)
+    got = solve(queries(), backend="fine/fused/aligned", chunk=CHUNK, max_batch=4)
+    assert np.array_equal(ref[0].alive, got[0].alive)
+    assert np.array_equal(ref[0].support, got[0].support)
+    assert ref[1] == got[1]
+    assert np.array_equal(ref[2].trussness, got[2].trussness)
+
+
+# --------------------------------------------------------------------- #
+# (b) Aligned-layout tiling validation
+# --------------------------------------------------------------------- #
+def test_validate_fused_tiling_accepts_aligned_pack():
+    packed, _, _ = _packed_batch([rmat(5, 6, seed=1), erdos(25, 4.0, seed=0)])
+    block = FusedConfig().clamp(packed.slot_nnz).block
+    validate_fused_tiling(packed.problem, slots=packed.slots, block=block)
+
+
+def test_validate_fused_tiling_rejects_straddling_block():
+    packed, _, _ = _packed_batch([rmat(5, 6, seed=1), erdos(25, 4.0, seed=0)])
+    with pytest.raises(InvalidGraphError) as ei:
+        validate_fused_tiling(
+            packed.problem, slots=packed.slots, block=2 * packed.slot_nnz
+        )
+    assert ei.value.kind == "fused_tiling"
+    assert ei.value.slot == 1  # the first straddled band boundary
+
+
+def test_validate_fused_tiling_names_spilling_slot():
+    packed, _, _ = _packed_batch([rmat(5, 6, seed=1), erdos(25, 4.0, seed=0)])
+    p = packed.problem
+    rowptr = np.asarray(p.rowptr).copy()
+    # Shift slot 0's first non-empty row so its lanes spill into slot 1.
+    deg = np.asarray(p.deg)
+    v = int(np.argmax(deg[1:] > 0)) + 1
+    rowptr[v - 1] = packed.slot_nnz - 1
+    bad = p._replace(rowptr=rowptr)
+    with pytest.raises(InvalidGraphError) as ei:
+        validate_fused_tiling(bad, slots=packed.slots, block=32)
+    assert ei.value.kind == "fused_tiling"
+    assert ei.value.slot == 0
+    assert f"row {v}" in str(ei.value)
+
+
+def test_fused_executor_validates_before_dispatch():
+    packed, slot_ids, window = _packed_batch(
+        [rmat(5, 6, seed=1), erdos(25, 4.0, seed=0)]
+    )
+    exe = PeelExecutor(
+        backend="fused", window=window, chunk=CHUNK,
+        fused_config=FusedConfig(block=32),
+    )
+    rowptr = np.asarray(packed.problem.rowptr).copy()
+    deg = np.asarray(packed.problem.deg)
+    v = int(np.argmax(deg[1:] > 0)) + 1
+    rowptr[v - 1] = packed.slot_nnz - 1
+    with pytest.raises(InvalidGraphError):
+        exe.peel(
+            packed.problem._replace(rowptr=rowptr),
+            slot_ids=slot_ids,
+            k0=np.full(packed.slots, 3, np.int32),
+        )
+
+
+def test_fused_rejects_mesh():
+    with pytest.raises(ValueError, match="mesh|shard"):
+        PeelExecutor(backend="fused", window=32, mesh=object())
+
+
+# --------------------------------------------------------------------- #
+# (c) Auto rule: heavy imbalance upgrades the hand-kernel path to fused
+# --------------------------------------------------------------------- #
+def _stats(coarse_imbalance, lane_eff):
+    return ImbalanceStats(
+        name="synthetic", n=100, nnz=1000, max_degree=50, mean_degree=10.0,
+        coarse_imbalance=coarse_imbalance, fine_imbalance=1.5,
+        coarse_lane_efficiency=lane_eff, fine_lane_efficiency=0.9,
+        coarse_tasks=100, fine_tasks=1000,
+    )
+
+
+def test_choose_backend_upgrades_heavy_imbalance_to_fused():
+    heavy = _stats(coarse_imbalance=20.0, lane_eff=0.05)
+    assert choose_backend(heavy, kernel="pallas", layout="aligned") == (
+        BackendKey("fine", "fused", "aligned")
+    )
+    # moderate imbalance stays on the unfused Pallas kernel
+    mild = _stats(coarse_imbalance=4.0, lane_eff=0.3)
+    assert choose_backend(mild, kernel="pallas", layout="aligned") == (
+        BackendKey("fine", "pallas", "aligned")
+    )
+    # the XLA path never upgrades (fused is the hand-kernel family)
+    assert choose_backend(heavy, kernel="xla", layout="aligned") == (
+        BackendKey("fine", "xla", "aligned")
+    )
+    # no fused/contig variant exists: layout="contig" never upgrades
+    assert choose_backend(heavy, kernel="pallas", layout="contig") == (
+        BackendKey("fine", "pallas", "contig")
+    )
+
+
+# --------------------------------------------------------------------- #
+# (d) Autotune configs and store
+# --------------------------------------------------------------------- #
+def test_fused_config_validation_and_clamp():
+    with pytest.raises(ValueError):
+        FusedConfig(block=100)  # not a power of two
+    with pytest.raises(ValueError):
+        FusedConfig(schedule="magic")
+    cfg = FusedConfig(block=256, schedule="bsearch", xla_flags=["--x"])
+    assert cfg.clamp(64) == FusedConfig(block=64, schedule="bsearch",
+                                        xla_flags=("--x",))
+    assert cfg.clamp(512) is cfg
+    assert FusedConfig.from_signature(cfg.signature()) == cfg
+
+
+def test_candidate_configs_clamped_and_deduped():
+    cands = candidate_configs(64)
+    assert all(c.block <= 64 for c in cands)
+    sigs = [c.signature() for c in cands]
+    assert len(sigs) == len(set(sigs))
+
+
+def test_autotune_store_roundtrip(tmp_path):
+    path = tmp_path / "autotune.json"
+    bucket, slots = (32, 128, 32), 2
+    store = AutotuneStore(path)
+    assert store.get(bucket, slots) is None
+    winner = FusedConfig(block=32, schedule="bsearch")
+    store.put(bucket, slots, winner, stats={"best_s": 0.01})
+    assert store.get(bucket, slots) == winner
+    # a FRESH store (new process stand-in) replays the same config
+    assert AutotuneStore(path).get(bucket, slots) == winner
+    # unknown (bucket, slots) falls back to the stock default
+    assert AutotuneStore(path).get(bucket, 4) is None
+    assert lookup(bucket, slots, default=FusedConfig()) == FusedConfig()
+
+
+def test_autotune_fused_sweeps_and_persists(tmp_path):
+    g = erdos(40, 4.0, seed=0)
+    bucket = bucket_for(g, chunk=CHUNK)
+    store = AutotuneStore(tmp_path / "autotune.json")
+    candidates = (
+        FusedConfig(block=32, schedule="compare"),
+        FusedConfig(block=32, schedule="bsearch"),
+    )
+    winner, rows = autotune_fused(
+        bucket, 1, graphs=[g], chunk=CHUNK, candidates=candidates,
+        repeats=1, store=store,
+    )
+    assert winner in candidates
+    assert len(rows) == 2 and all(r["best_s"] > 0 for r in rows)
+    assert AutotuneStore(store.path).get(bucket, 1) == winner
+
+
+_PERSIST_SCRIPT = """
+import sys
+
+import numpy as np
+
+from repro.api.cache import bucket_for, enable_persistent_cache
+from repro.graphs import erdos
+from repro.kernels import autotune
+from repro.kernels.autotune import FusedConfig
+
+cache_dir, phase = sys.argv[1], sys.argv[2]
+enable_persistent_cache(cache_dir)
+g = erdos(40, 4.0, seed=0)
+bucket = bucket_for(g, chunk=64)
+if phase == "tune":
+    # Candidates exclude the stock default so a replay is distinguishable
+    # from a store miss.
+    winner, _ = autotune.autotune_fused(
+        bucket, 1, graphs=[g], chunk=64,
+        candidates=(FusedConfig(block=32, schedule="bsearch"),
+                    FusedConfig(block=16, schedule="bsearch")),
+        repeats=1,
+    )
+    print(f"PERSIST_WINNER={winner.signature()}")
+else:
+    replayed = autotune.lookup(bucket, 1)
+    print(f"PERSIST_WINNER={replayed.signature()}")
+    from repro.api import Session, TrussQuery
+
+    s = Session(backend="fine/fused/aligned", chunk=64, max_batch=1,
+                cache_dir=cache_dir)
+    variant = s.planner.cache_variant(s.planner.backend, bucket, 1)
+    print(f"PERSIST_VARIANT_SIG={variant[3]}")
+    from repro.core import trussness_numpy
+
+    dec = s.solve([TrussQuery.decompose(g)])[0]
+    assert np.array_equal(dec.trussness, trussness_numpy(g))
+    print("PERSIST_PARITY=ok")
+"""
+
+
+def _run_persist(cache_dir: str, phase: str) -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = (
+        os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _PERSIST_SCRIPT, cache_dir, phase],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return dict(
+        line.split("=", 1)
+        for line in proc.stdout.splitlines()
+        if line.startswith("PERSIST_")
+    )
+
+
+def test_autotuned_config_replays_across_processes(tmp_path):
+    """Acceptance: a fresh process replays the tuned config from the
+    store next to the persistent compile cache, folds it into its
+    compile-cache variant key, and still matches the oracle."""
+    cache_dir = str(tmp_path / "cache")
+    tuned = _run_persist(cache_dir, "tune")
+    assert os.path.exists(os.path.join(cache_dir, "autotune.json"))
+    replay = _run_persist(cache_dir, "replay")
+    assert replay["PERSIST_WINNER"] == tuned["PERSIST_WINNER"]
+    # a non-default winner proves the value came from disk, not the stock
+    # fallback, and the planner folds it into the executable's cache key
+    assert replay["PERSIST_WINNER"] != str(FusedConfig().signature())
+    assert replay["PERSIST_VARIANT_SIG"] == tuned["PERSIST_WINNER"]
+    assert replay["PERSIST_PARITY"] == "ok"

@@ -213,8 +213,16 @@ def test_fallback_chain_shapes():
         BackendKey("fine", "xla", "contig"),
         BackendKey("coarse", "xla", "contig"),
     )
+    # the fused megakernel steps down to its unfused Pallas twin first,
+    # then XLA, then coarse — layout preserved at every step
+    assert fallback_backends("fine/fused/aligned") == (
+        BackendKey("fine", "pallas", "aligned"),
+        BackendKey("fine", "xla", "aligned"),
+        BackendKey("coarse", "xla", "aligned"),
+    )
     # layout is preserved down the whole chain (mesh safety)
     assert all(k.layout == "aligned" for k in fallback_backends("fine/pallas/aligned"))
+    assert all(k.layout == "aligned" for k in fallback_backends("fine/fused/aligned"))
     # the last resort has nowhere to fall
     assert fallback_backends("coarse/xla/contig") == ()
 
@@ -288,6 +296,32 @@ def test_compile_fault_falls_back_bit_identically():
     dec = s.solve([TrussQuery.decompose(g)])[0]
     assert np.array_equal(dec.trussness, _oracle(g))  # coarse parity
     assert s.backend_fallbacks == 1 and s.retries == 0
+
+
+def test_poisoned_fused_compile_lands_on_xla_bit_identically():
+    """A fused megakernel whose compile is poisoned walks its chain
+    (fused -> pallas -> xla); poisoning the first two steps lands the
+    batch on fine/xla with oracle-identical results."""
+    g = tiny()
+    s = Session(
+        backend="fine/fused/aligned",
+        max_batch=2,
+        chunk=64,
+        faults=FaultPlan(
+            [
+                FaultSpec(
+                    "compile", times=1, where=(("backend", "fine/fused/aligned"),)
+                ),
+                FaultSpec(
+                    "compile", times=1, where=(("backend", "fine/pallas/aligned"),)
+                ),
+            ]
+        ),
+        retry=FAST_RETRY,
+    )
+    dec = s.solve([TrussQuery.decompose(g)])[0]
+    assert np.array_equal(dec.trussness, _oracle(g))
+    assert s.backend_fallbacks == 2 and s.retries == 0
 
 
 def test_poison_member_quarantined_survivors_bit_identical():
