@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs bench-kernels lint
+.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs bench-kernels bench-serve lint
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -50,6 +50,13 @@ bench-obs:
 # bucket, fused/XLA bit-parity, and autotune-store replay).
 bench-kernels:
 	$(PYTHON) -m benchmarks.kernels_bench --smoke --out BENCH_kernels.json
+
+# Fleet benchmark -> BENCH_serve.json (queries/s + p50/p99 latency at
+# 1 vs 3 replica processes under mixed-bucket traffic, plus the router's
+# affinity hit rate; smoke asserts bit-identical-to-solve() and an
+# affinity hit rate above 0.8 on the 3-replica fleet).
+bench-serve:
+	$(PYTHON) -m benchmarks.serve_bench --smoke --out BENCH_serve.json
 
 # Byte-compile gate (no extra tooling required) + ruff when available
 # (CI installs it via requirements-dev.txt; bare containers skip it).

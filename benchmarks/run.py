@@ -12,6 +12,7 @@ tables.  Sections:
   stream    — incremental truss maintenance: updates/s + frontier ratio
   api       — repro.api planner overhead + backend auto-choice per bucket
   obs       — tracing overhead on/off + observed per-bucket imbalance
+  serve     — multi-replica fleet: queries/s, p50/p99, affinity hit rate
 """
 
 from __future__ import annotations
@@ -110,6 +111,12 @@ def main() -> None:
         from . import obs_bench
 
         obs_bench.report(obs_bench.run_obs_bench(repeats=2))
+
+    if only in (None, "serve"):
+        _section("serve (fleet: qps + p50/p99 + affinity hit rate)")
+        from . import serve_bench
+
+        serve_bench.report(serve_bench.run_serve_bench(queries_per_fleet=24))
 
     print(f"\n# total bench wall time: {time.time()-t_start:.1f}s")
 

@@ -1,0 +1,175 @@
+"""repro.serve benchmark: fleet throughput/latency + affinity accounting.
+
+Hammers a real fleet (replica subprocesses, real sockets) with
+mixed-bucket traffic from concurrent closed-loop clients and reports,
+for 1 replica vs 3 replicas:
+
+* **queries/s** — end-to-end through router + wire + replica Session;
+* **p50 / p99 latency** — per-query submit→result wall time;
+* **affinity hit rate** — fraction of routed queries that landed on
+  their bucket's home replica (the router's whole point: executables
+  compile once per bucket per fleet, not once per replica).
+
+Writes ``BENCH_serve.json`` (``--out PATH``); ``--smoke`` shrinks the
+load and **asserts** the affinity hit rate exceeds 0.8 on the 3-replica
+fleet and that fleet results stay bit-identical to a local ``solve()``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.api import TrussQuery, solve
+from repro.graphs import erdos, rmat
+from repro.serve import Fleet, FleetClient
+
+__all__ = ["run_serve_bench", "report"]
+
+_WARMUP = (
+    {"kind": "erdos", "n": 48, "avg_degree": 6.0, "seed": 0},
+    {"kind": "erdos", "n": 150, "avg_degree": 5.0, "seed": 1},
+    {"kind": "rmat", "scale": 7, "edge_factor": 5, "seed": 2},
+)
+
+
+def _graphs():
+    return [
+        erdos(48, 6.0, seed=0),
+        erdos(150, 5.0, seed=1),
+        rmat(7, 5, seed=2),
+    ]
+
+
+def _query_stream(n: int) -> list[TrussQuery]:
+    """Mixed workloads cycling through three distinct shape buckets."""
+    gs = _graphs()
+    makers = (
+        lambda g: TrussQuery.decompose(g),
+        lambda g: TrussQuery.kmax(g),
+        lambda g: TrussQuery.ktruss(g, k=3),
+    )
+    # Decorrelate workload from bucket so every (workload, bucket) pair
+    # shows up in the stream.
+    return [makers[i % 3](gs[(i // 3) % len(gs)]) for i in range(n)]
+
+
+def _hammer(client: FleetClient, queries: list[TrussQuery], workers: int):
+    """Closed-loop concurrent load; returns (results, latencies_s, wall_s)."""
+    results: list = [None] * len(queries)
+    lat = [0.0] * len(queries)
+    errors: list[BaseException] = []
+    it = iter(range(len(queries)))
+    lock = threading.Lock()
+
+    def loop():
+        while True:
+            with lock:
+                i = next(it, None)
+            if i is None:
+                return
+            t0 = time.perf_counter()
+            try:
+                results[i] = client.submit(queries[i]).result()
+            except BaseException as e:  # shed/quarantine under overload
+                errors.append(e)
+            lat[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=loop) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return results, lat, wall
+
+
+def run_serve_bench(
+    *, queries_per_fleet: int = 60, workers: int = 4, sizes=(1, 3)
+) -> dict:
+    queries = _query_stream(queries_per_fleet)
+    expect = solve(list(queries), max_batch=2)
+    out: dict = {"queries_per_fleet": queries_per_fleet, "workers": workers}
+    for size in sizes:
+        with tempfile.TemporaryDirectory(prefix="serve_bench_") as td:
+            with Fleet(
+                size, workdir=td, max_batch=2, warmup=_WARMUP
+            ) as fleet:
+                client = FleetClient(fleet)
+                results, lat, wall = _hammer(client, list(queries), workers)
+                st = client.stats()
+        matched = sum(
+            1
+            for exp, got in zip(expect, results)
+            if (
+                got == exp
+                if isinstance(exp, int)
+                else np.array_equal(
+                    getattr(got, "trussness", getattr(got, "alive", None)),
+                    getattr(exp, "trussness", getattr(exp, "alive", None)),
+                )
+            )
+        )
+        out[f"replicas_{size}"] = {
+            "queries": len(queries),
+            "bit_identical": matched,
+            "queries_per_s": round(len(queries) / wall, 3),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "affinity_hit_rate": st["affinity_hit_rate"],
+            "affinity_hits": st["affinity_hits"],
+            "spillovers": st["spillovers"],
+            "cold_assignments": st["cold_assignments"],
+            "queries_shed": st["queries_shed"],
+        }
+    return out
+
+
+def report(row: dict) -> None:
+    for size_key in sorted(k for k in row if k.startswith("replicas_")):
+        r = row[size_key]
+        print(
+            f"{size_key},qps={r['queries_per_s']},p50_ms={r['p50_ms']},"
+            f"p99_ms={r['p99_ms']},affinity={r['affinity_hit_rate']},"
+            f"spill={r['spillovers']},shed={r['queries_shed']}"
+        )
+        print(
+            f"bench,serve_{size_key},{r['p50_ms']},"
+            f"qps={r['queries_per_s']}"
+        )
+
+
+def main() -> None:
+    out = None
+    args = list(sys.argv[1:])
+    if "--out" in args:
+        out = args[args.index("--out") + 1]
+        del args[args.index("--out") : args.index("--out") + 2]
+    smoke = "--smoke" in args
+    row = run_serve_bench(queries_per_fleet=30 if smoke else 60)
+    report(row)
+    if smoke:
+        for size_key in ("replicas_1", "replicas_3"):
+            r = row[size_key]
+            # Routing changes *where* a query runs, never what it computes.
+            assert r["bit_identical"] == r["queries"], row
+        # Warmup seeds each bucket's home; after the one cold assignment
+        # per bucket, mixed traffic must keep landing home.
+        assert row["replicas_3"]["affinity_hit_rate"] > 0.8, row
+        print("# smoke OK: bit-identical under the fleet + affinity > 0.8")
+    if out:
+        with open(out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

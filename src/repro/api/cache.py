@@ -34,6 +34,7 @@ from ..obs import MetricsRegistry
 __all__ = [
     "Bucket",
     "bucket_for",
+    "bucket_str",
     "build_peel",
     "CacheStats",
     "CompileCache",
@@ -109,6 +110,15 @@ def bucket_for(g: CSRGraph, *, chunk: int = 256, min_window: int = 8) -> Bucket:
     )
 
 
+def bucket_str(bucket: Bucket) -> str:
+    """Canonical string label of one bucket (``n{..}-nnz{..}-w{..}``).
+
+    The one spelling shared by metrics labels, planner stats rows, and the
+    serving tier's affinity keys — the router matches these against a
+    replica's ``compiled_buckets``, so every producer must agree."""
+    return f"n{bucket.n_pad}-nnz{bucket.nnz_pad}-w{bucket.window}"
+
+
 def build_peel(
     *,
     mode: str = "eager",
@@ -152,11 +162,15 @@ class CacheStats:
             metrics = MetricsRegistry()  # standalone cache: private series
         self.metrics = metrics
 
-    def record_compile(self) -> None:
+    def record_compile(self, bucket: "Bucket | None" = None) -> None:
         self.metrics.inc("cache_compiles")
+        if bucket is not None:
+            self.metrics.inc("cache_bucket_compiles", bucket=bucket_str(bucket))
 
-    def record_hit(self) -> None:
+    def record_hit(self, bucket: "Bucket | None" = None) -> None:
         self.metrics.inc("cache_hits")
+        if bucket is not None:
+            self.metrics.inc("cache_bucket_hits", bucket=bucket_str(bucket))
 
     @property
     def compiles(self) -> int:
@@ -217,7 +231,7 @@ class CompileCache:
         with self._lock:
             exe = self._exes.get(key)
             if exe is not None:
-                self.stats.record_hit()
+                self.stats.record_hit(bucket)
                 return exe, True
             try:
                 exe = self._exes[key] = self._builder(key)
@@ -232,8 +246,16 @@ class CompileCache:
                     bucket=bucket,
                     cause=e,
                 ) from e
-            self.stats.record_compile()
+            self.stats.record_compile(bucket)
             return exe, False
+
+    def buckets(self) -> tuple[str, ...]:
+        """Labels of every bucket holding at least one compiled executable
+        (sorted) — a replica's ``compiled_buckets`` health field, and the
+        raw material of the router's bucket affinity."""
+        with self._lock:
+            seen = {bucket_str(b) for (b, _slots, _variant) in self._exes}
+        return tuple(sorted(seen))
 
     def __len__(self) -> int:
         return len(self._exes)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Any, Optional
 
 import numpy as np
@@ -188,6 +189,9 @@ class Planner:
             )
         self._slot_ids: dict[tuple[int, int], Any] = {}
         # Observability: planning overhead + which backend each bucket got.
+        # Guarded by _stats_lock — concurrent submitters (the serving
+        # tier's connection threads) all assign through one planner.
+        self._stats_lock = threading.Lock()
         self.queries_planned = 0
         self.plan_time_s = 0.0
         self.backend_choices: dict[tuple[Bucket, BackendKey], int] = {}
@@ -236,11 +240,12 @@ class Planner:
                 )
             span.attrs["backend"] = str(key)
         dt = obs_clock.now() - t0
-        self.queries_planned += 1
-        self.plan_time_s += dt
-        self.backend_choices[(bucket, key)] = (
-            self.backend_choices.get((bucket, key), 0) + 1
-        )
+        with self._stats_lock:
+            self.queries_planned += 1
+            self.plan_time_s += dt
+            self.backend_choices[(bucket, key)] = (
+                self.backend_choices.get((bucket, key), 0) + 1
+            )
         state = QueryState(query=query, bucket=bucket, backend=key)
         state.stats.plan_time_s = dt
         state.stats.bucket = bucket
@@ -272,7 +277,8 @@ class Planner:
                     )
                 )
         dt = obs_clock.now() - t0
-        self.plan_time_s += dt  # batching is planning work too
+        with self._stats_lock:
+            self.plan_time_s += dt  # batching is planning work too
         return Plan(batches=batches, plan_time_s=dt)
 
     # ------------------------------------------------------------------ #
@@ -505,25 +511,27 @@ class Planner:
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
         """Planning observability: overhead per query + chosen backends."""
+        from .cache import bucket_str
+
+        with self._stats_lock:
+            queries_planned = self.queries_planned
+            plan_time_s = self.plan_time_s
+            choices = dict(self.backend_choices)
         per_query_us = (
-            1e6 * self.plan_time_s / self.queries_planned
-            if self.queries_planned
-            else 0.0
+            1e6 * plan_time_s / queries_planned if queries_planned else 0.0
         )
         return {
-            "queries_planned": self.queries_planned,
-            "plan_time_s": round(self.plan_time_s, 6),
+            "queries_planned": queries_planned,
+            "plan_time_s": round(plan_time_s, 6),
             "plan_us_per_query": round(per_query_us, 2),
             # One row per (bucket, backend) choice — the same bucket can
             # legitimately map to several backends under the auto rule.
             "backends": [
                 {
-                    "bucket": f"n{b.n_pad}-nnz{b.nnz_pad}-w{b.window}",
+                    "bucket": bucket_str(b),
                     "backend": str(k),
                     "queries": n,
                 }
-                for (b, k), n in sorted(
-                    self.backend_choices.items(), key=lambda kv: -kv[1]
-                )
+                for (b, k), n in sorted(choices.items(), key=lambda kv: -kv[1])
             ],
         }

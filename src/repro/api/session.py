@@ -15,6 +15,7 @@ module now; the lowering itself lives in :class:`repro.api.Planner`.
 from __future__ import annotations
 
 import contextlib
+import threading
 from collections import deque
 from typing import Any
 
@@ -152,32 +153,43 @@ class TrussFuture:
         if timeout is _UNSET:
             timeout = self._state.time_remaining()
         t0 = obs_clock.now()
+        session = self._session
         while not self._done:
             waited = obs_clock.now() - t0
             if timeout is not None and waited >= timeout:
-                self._session._record_deadline_miss(self._state, waited)
-                shed = self._session.shed_on_timeout
+                session._record_deadline_miss(self._state, waited)
+                shed = session.shed_on_timeout
                 err = TrussTimeoutError(
                     f"query {self._state.id} ({self._state.query.workload}) "
                     f"unresolved after {waited:.3f}s (timeout={timeout}s); "
                     f"bucket={self._state.bucket}, "
-                    f"queue_depth={len(self._session.queue)}"
+                    f"queue_depth={len(session.queue)}"
                     + ("; query shed" if shed else ""),
                     bucket=self._state.bucket,
-                    queue_depth=len(self._session.queue),
+                    queue_depth=len(session.queue),
                     request_id=self._state.id,
                     waited_s=waited,
                     shed=shed,
                 )
                 if shed:
-                    self._session._shed(self._state, err)
+                    session._shed(self._state, err)
                 raise err
-            batch = self._session.queue.next_batch(group=self._state.group)
-            if not batch:
+            batch = session._form_batch(group=self._state.group)
+            if batch:
+                session._run_batch(session._planned(batch))
+                continue
+            with session._cv:
+                if self._done:
+                    break
+                if self._state.id in session._inflight:
+                    # Another thread's dispatch owns this query's batch;
+                    # wait for its resolution.  The wait is bounded so the
+                    # deadline check above still runs on the obs clock.
+                    session._cv.wait(timeout=0.05)
+                    continue
                 raise RuntimeError(
                     f"query {self._state.id} is unresolved but not queued"
                 )
-            self._session._run_batch(self._session._planned(batch))
         if self._error is not None:
             raise self._error
         return self._result
@@ -272,6 +284,13 @@ class Session:
         )
         self.queue = QueryQueue(max_batch=max_batch)
         self._futures: dict[int, TrussFuture] = {}
+        # Thread safety: the RPC serving tier drives one Session from many
+        # connection threads, so the batch former, the futures map and the
+        # in-flight set share one condition variable.  Batch *dispatches*
+        # deliberately run outside the lock (device time dominates; only
+        # queue/future state needs exclusion).
+        self._cv = threading.Condition()
+        self._inflight: set[int] = set()
         self.faults = faults if faults is not None else FaultPlan.from_env()
         self.retry = retry or RetryPolicy()
         self.shed_on_timeout = bool(shed_on_timeout)
@@ -361,8 +380,9 @@ class Session:
         with self.obs.activate():
             state = self.planner.assign(query)
         fut = TrussFuture(self, state)
-        self._futures[state.id] = fut
-        self.queue.enqueue(state)
+        with self._cv:
+            self._futures[state.id] = fut
+            self.queue.enqueue(state)
         self.obs.metrics.set_gauge("queue_depth", len(self.queue))
         return fut
 
@@ -378,7 +398,9 @@ class Session:
         queries = list(queries)
         with self.obs.activate(), self.obs.tracer.span("solve", queries=len(queries)):
             futs = [self.submit(q) for q in queries]
-            states = self.queue.drain()
+            with self._cv:
+                states = self.queue.drain()
+                self._inflight.update(st.id for st in states)
             now = obs_clock.now()
             plan = self.planner.plan(states)
             for batch in plan.batches:
@@ -434,7 +456,7 @@ class Session:
     # ------------------------------------------------------------------ #
     def poll(self) -> int:
         """Run at most one micro-batch; returns how many queries resolved."""
-        batch = self.queue.next_batch()
+        batch = self._form_batch()
         if not batch:
             return 0
         return self._run_batch(self._planned(batch))
@@ -446,6 +468,29 @@ class Session:
             n += self.poll()
         self.obs.export_trace()  # no-op unless a trace path is configured
         return n
+
+    def drain(self, timeout_s: float | None = None) -> int:
+        """Serve everything pending to completion — the serving tier's
+        pre-shutdown hook.  Flushes the queue, then waits out batches in
+        flight on other threads (up to ``timeout_s``; ``None`` = until
+        they resolve).  Returns how many queries this call resolved."""
+        n = self.flush()
+        deadline = (
+            obs_clock.now() + timeout_s if timeout_s is not None else None
+        )
+        with self._cv:
+            while self._inflight:
+                if deadline is not None and obs_clock.now() >= deadline:
+                    break
+                self._cv.wait(timeout=0.05)
+        return n
+
+    def _form_batch(self, group=None) -> list[QueryState]:
+        """Atomically dequeue one micro-batch and mark it in flight."""
+        with self._cv:
+            batch = self.queue.next_batch(group=group)
+            self._inflight.update(st.id for st in batch)
+        return batch
 
     def _planned(self, batch: list[QueryState]) -> PlannedBatch:
         """Wrap a queue-formed (single-group) batch for the planner."""
@@ -487,10 +532,13 @@ class Session:
     def _shed(self, state: QueryState, err: BaseException) -> None:
         """Mark a timed-out query dead: reclaim its queue slot, fail its
         future, count the shed.  The batch former never sees it again."""
-        self.queue.discard(state)
-        fut = self._futures.pop(state.id, None)
-        if fut is not None:
-            fut._fail(err)
+        with self._cv:
+            self.queue.discard(state)
+            fut = self._futures.pop(state.id, None)
+            self._inflight.discard(state.id)
+            if fut is not None:
+                fut._fail(err)
+            self._cv.notify_all()
         self.obs.metrics.inc("queries_shed")
         self.obs.metrics.set_gauge("queue_depth", len(self.queue))
 
@@ -505,19 +553,27 @@ class Session:
         try:
             outcomes = self.runner.run(planned)
         except Exception as e:
-            for st in batch:
-                fut = self._futures.pop(st.id, None)
-                if fut is not None:
-                    fut._fail(e)
+            with self._cv:
+                for st in batch:
+                    fut = self._futures.pop(st.id, None)
+                    self._inflight.discard(st.id)
+                    if fut is not None:
+                        fut._fail(e)
+                self._cv.notify_all()
             raise
         m = self.obs.metrics
-        for out in outcomes:
-            fut = self._futures.pop(out.state.id)
-            if out.ok:
-                fut._resolve(out.result)
-            else:
-                m.inc("queries_failed")
-                fut._fail(out.error)
+        with self._cv:
+            for out in outcomes:
+                fut = self._futures.pop(out.state.id, None)
+                self._inflight.discard(out.state.id)
+                if fut is None:
+                    continue  # shed mid-flight: its future already failed
+                if out.ok:
+                    fut._resolve(out.result)
+                else:
+                    m.inc("queries_failed")
+                    fut._fail(out.error)
+            self._cv.notify_all()
         m.set_gauge("queue_depth", len(self.queue))
         return len(batch)
 

@@ -63,6 +63,19 @@ def _fmt_key(name: str, labels: _LabelKey) -> str:
     return f"{name}{{{inner}}}"
 
 
+def _parse_key(key: str) -> tuple[str, dict[str, str]]:
+    """Invert :func:`_fmt_key`: ``"name{a=b,c=d}"`` -> (name, labels)."""
+    if "{" not in key or not key.endswith("}"):
+        return key, {}
+    name, inner = key.split("{", 1)
+    labels: dict[str, str] = {}
+    for pair in inner[:-1].split(","):
+        if pair:
+            k, _, v = pair.partition("=")
+            labels[k] = v
+    return name, labels
+
+
 class HistogramData:
     """One histogram series: cumulative-bucket counts + sum/min/max.
 
@@ -162,6 +175,22 @@ class MetricsRegistry:
             h.observe(float(value))
         if self.parent is not None:
             self.parent.observe(name, value, buckets=buckets, **labels)
+
+    def ingest(self, counters: Mapping[str, float], **labels) -> None:
+        """Mirror another process's cumulative counters into this registry.
+
+        ``counters`` maps snapshot keys — plain names or the
+        ``name{k=v,...}`` strings :meth:`snapshot` emits — to cumulative
+        values read from a remote source (e.g. a replica's
+        ``HealthReport``).  Each series is recorded as a **gauge** (last
+        write wins): the remote values are already totals, so replaying
+        them through :meth:`inc` on every poll would double-count.
+        ``labels`` are merged into every series (``replica=...``), which
+        keeps a fleet roll-up per-source while the parent chain still
+        aggregates the whole fleet in one snapshot."""
+        for key, value in counters.items():
+            name, parsed = _parse_key(str(key))
+            self.set_gauge(name, float(value), **{**parsed, **labels})
 
     # -- read side ----------------------------------------------------- #
     def value(self, name: str, **labels) -> float:

@@ -225,7 +225,13 @@ def restore_session(path: str, session=None, **session_kwargs):
     )
     if ckpt.tri_keys is not None:
         stream._tri_cache = TriangleCache(ckpt.graph, tri_keys=ckpt.tri_keys)
+    # The checkpoint's updates_applied meta is the durable lifetime count:
+    # it seeds both the auto-checkpoint filename sequence and the restored
+    # session's updates_total, so a restore + re-checkpoint keeps strictly
+    # increasing sequence numbers (latest_checkpoint stays a name sort)
+    # and stream replay offsets survive the handoff.
     stream._ckpt_seq = int(ckpt.meta.get("updates_applied", 0))
+    stream._updates_total = int(ckpt.meta.get("updates_applied", 0))
     return stream
 
 

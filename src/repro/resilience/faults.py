@@ -33,10 +33,19 @@ poison      :class:`~repro.errors.InvalidGraphError` attributed to one
 clock_skew  no exception: advances the active FakeClock by ``skew_s``
             (real clocks are left alone) — exercises deadline/timeout
             handling under time jumps.
+network     :class:`~repro.errors.DeviceError` at a serving-tier RPC
+            boundary (``repro.serve``) — exercises router re-route and
+            replica quarantine.
+replica_kill no exception: an *action* site — the fleet chaos storm
+            polls it (``if inject("replica_kill", replica=...)``) and
+            kills the named replica process when it fires, exercising
+            warm stream handoff to a survivor.
 ========== ==============================================================
 
 Every fired fault is counted in the current metrics registry as
-``faults_injected{site=...}``.
+``faults_injected{site=...}``; :func:`inject` returns the fired
+:class:`FaultSpec` (``None`` when nothing fired) so action sites can
+react without a raise.
 """
 
 from __future__ import annotations
@@ -67,7 +76,15 @@ __all__ = [
     "poison_csr_arrays",
 ]
 
-FAULT_SITES = ("compile", "dispatch", "device_oom", "poison", "clock_skew")
+FAULT_SITES = (
+    "compile",
+    "dispatch",
+    "device_oom",
+    "poison",
+    "clock_skew",
+    "network",
+    "replica_kill",
+)
 FAULTS_ENV_VAR = "REPRO_FAULTS"
 
 
@@ -207,21 +224,22 @@ def use_plan(plan: FaultPlan | None):
         _current_plan.reset(token)
 
 
-def inject(site: str, **ctx) -> None:
+def inject(site: str, **ctx) -> FaultSpec | None:
     """Fault site hook: raise/act if the active plan says so, else no-op.
 
     Call this from production code at each site with whatever context is
     known (``bucket=``, ``backend=``, ``slot=``, ``query=``,
-    ``queries=``).  Exception sites raise typed errors with
-    ``injected=True``; ``clock_skew`` advances the active FakeClock and
-    returns.
+    ``queries=``, ``replica=``).  Exception sites raise typed errors
+    with ``injected=True``; action sites (``clock_skew`` performs the
+    skew, ``replica_kill`` leaves the action to the caller) return the
+    fired spec so call sites can react — ``None`` means nothing fired.
     """
     plan = _current_plan.get()
     if plan is None:
-        return
+        return None
     spec = plan.should_fire(site, ctx)
     if spec is None:
-        return
+        return None
     current_registry().inc("faults_injected", site=site)
     bucket = ctx.get("bucket")
     backend = ctx.get("backend")
@@ -230,7 +248,15 @@ def inject(site: str, **ctx) -> None:
         clk = obs_clock.get_clock()
         if isinstance(clk, FakeClock):
             clk.advance(max(0.0, float(spec.skew_s)))
-        return
+        return spec
+    if site == "replica_kill":
+        # Pure action site: the fleet's monitor polls it and does the
+        # killing itself — there is no in-process exception to raise.
+        return spec
+    if site == "network":
+        raise DeviceError(
+            msg, backend=backend, site=site, injected=True
+        )
     if site == "compile":
         raise CompileError(
             msg, bucket=bucket, backend=backend, site=site, injected=True

@@ -35,7 +35,6 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Any, Callable
 
-from ..api.registry import BackendKey, fallback_backends
 from ..errors import (
     CompileError,
     DeviceError,
@@ -49,6 +48,7 @@ from .retry import RetryPolicy
 
 if TYPE_CHECKING:  # pragma: no cover — avoids a cycle: planner imports faults
     from ..api.planner import PlannedBatch, QueryState
+    from ..api.registry import BackendKey
 
 __all__ = ["Outcome", "ResilientRunner"]
 
@@ -95,6 +95,11 @@ class ResilientRunner:
         """Dispatch ``planned`` with isolation; one outcome per query,
         in the batch's order.  Only :class:`TrussError` faults are
         policy-handled — anything else propagates to the caller."""
+        # Lazy: the registry lives in repro.api, which imports this module
+        # — a top-level import would make `import repro.resilience` depend
+        # on import order (repro.serve imports resilience before api).
+        from ..api.registry import fallback_backends
+
         chain = [planned.backend]
         if self.policy.fallback:
             chain.extend(fallback_backends(planned.backend))

@@ -1,0 +1,74 @@
+"""repro.serve — the multi-replica serving tier over :mod:`repro.api`.
+
+The paper's load-imbalance problem, one level up: across *replicas*, one
+process pinned on a slow bucket starves the fleet unless work is routed
+by observed state.  Four pieces:
+
+* :mod:`.wire`    — length-prefixed JSON-over-socket protocol (queries,
+                    results, and typed errors cross processes bit-exactly);
+* :mod:`.replica` — worker process wrapping one thread-safe ``Session``:
+                    dummy-compute warmup before the port opens,
+                    ``max_live`` admission (shed at the door), periodic
+                    :class:`HealthReport`\\ s, drain-before-death;
+* :mod:`.router`  — bucket-affinity routing (same-bucket traffic goes to
+                    the replica that already compiled it), EDF spillover
+                    past a depth threshold, load shedding through the
+                    typed :class:`~repro.errors.TrussTimeoutError` path,
+                    quarantine + redistribution on health failure;
+* :mod:`.fleet` / :mod:`.client` — process lifecycle (spawn / monitor /
+                    chaos-kill / restart) and the ``solve()``-shaped
+                    :class:`FleetClient`, with warm handoff of streaming
+                    sessions via PR 7's checkpoint/restore.
+
+Quickstart::
+
+    from repro.serve import Fleet, FleetClient
+
+    with Fleet(3, workdir=".fleet") as fleet:
+        client = FleetClient(fleet)
+        results = client.solve(queries)   # bit-identical to solve(queries)
+"""
+
+from .client import FleetClient, FleetFuture, FleetStream
+from .fleet import Fleet, ManagedReplica
+from .replica import HealthReport, Replica, ReplicaConfig, health_report
+from .router import ReplicaHandle, Router
+from .wire import (
+    MAX_FRAME_BYTES,
+    WireError,
+    decode_query,
+    decode_result,
+    encode_query,
+    encode_result,
+    raise_remote_error,
+    recv_msg,
+    send_msg,
+)
+
+__all__ = [
+    # client
+    "FleetClient",
+    "FleetFuture",
+    "FleetStream",
+    # fleet
+    "Fleet",
+    "ManagedReplica",
+    # replica
+    "Replica",
+    "ReplicaConfig",
+    "HealthReport",
+    "health_report",
+    # router
+    "Router",
+    "ReplicaHandle",
+    # wire
+    "MAX_FRAME_BYTES",
+    "WireError",
+    "send_msg",
+    "recv_msg",
+    "encode_query",
+    "decode_query",
+    "encode_result",
+    "decode_result",
+    "raise_remote_error",
+]

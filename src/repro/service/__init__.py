@@ -10,12 +10,14 @@
       (pinned to one registry backend, exactly the old behavior);
     * ``TrussFuture`` — re-export of :class:`repro.api.TrussFuture`.
 
-    The cache and batcher spellings (``Bucket``, ``bucket_for``,
-    ``CompileCache``, ``build_peel``, ``enable_persistent_cache``,
-    ``Request``, ``RequestStats``, ``MicroBatcher``) still resolve but
-    are no longer part of the documented surface; importing the
-    ``repro.service.cache`` / ``repro.service.batcher`` shims raises a
-    :class:`DeprecationWarning`.  Import from :mod:`repro.api` instead.
+    The cache spellings (``Bucket``, ``bucket_for``, ``CompileCache``,
+    ``build_peel``, ``enable_persistent_cache``) still resolve but are
+    no longer part of the documented surface.  The deprecated
+    ``repro.service.cache`` / ``repro.service.batcher`` shim modules
+    (DeprecationWarning since PR 5) are gone — import from
+    :mod:`repro.api` instead (``MicroBatcher``'s role is
+    ``repro.api.QueryQueue``; ``Request``/``RequestStats`` are
+    ``repro.api.QueryState``/``RequestStats``).
 """
 
 # Cache names resolve straight from repro.api so the common legacy
@@ -33,15 +35,3 @@ __all__ = [
     "TrussFuture",
     "TrussService",
 ]
-
-_BATCHER_NAMES = ("MicroBatcher", "Request", "RequestStats")
-
-
-def __getattr__(name: str):
-    # Batcher names import lazily through the deprecated shim so merely
-    # importing ``repro.service`` doesn't warn, but touching them does.
-    if name in _BATCHER_NAMES:
-        from . import batcher
-
-        return getattr(batcher, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

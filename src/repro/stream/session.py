@@ -170,11 +170,22 @@ class StreamingTrussSession:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = int(checkpoint_every)
         self._ckpt_seq = 0  # monotone auto-checkpoint sequence number
+        self._updates_total = 0  # lifetime commits, surviving restore
 
     # Maintenance counters — views over this stream's metrics registry -- #
     @property
     def updates_applied(self) -> int:
         return int(self.metrics.value("stream_updates"))
+
+    @property
+    def updates_total(self) -> int:
+        """Lifetime committed updates **across restores**.
+
+        Unlike :attr:`updates_applied` (a per-instance metric that resets
+        to 0 in a restored session), this is the durable sequence number a
+        checkpoint's ``updates_applied`` meta records — the serving tier's
+        exactly-once replay anchor."""
+        return self._updates_total
 
     @property
     def update_dispatches(self) -> int:
@@ -303,12 +314,13 @@ class StreamingTrussSession:
             self._tri_cache.commit(delta, union_tri_keys)
         self._pending = None
         dispatches = 1 if fr.size else 0
+        self._updates_total += 1
         self.metrics.inc("stream_updates")
         self.metrics.inc("stream_update_dispatches", dispatches)
         self.metrics.inc("stream_edges_repeeled", fr.size)
         if (
             self.checkpoint_dir is not None
-            and self.updates_applied % self.checkpoint_every == 0
+            and self._updates_total % self.checkpoint_every == 0
         ):
             self._auto_checkpoint()
         return StreamUpdateResult(
@@ -344,7 +356,7 @@ class StreamingTrussSession:
             graph=self.graph,
             trussness=self.trussness,
             tri_keys=self._tri_cache.tri_keys if self._tri_cache else None,
-            updates_applied=self.updates_applied,
+            updates_applied=self.updates_total,
         )
         self.metrics.inc("stream_checkpoints")
         return out

@@ -9,7 +9,8 @@ Locks the observable surface other tooling depends on:
 * deadline handling runs on the obs clock (fake-able, no sleeping);
 * per-session metric isolation (the ``ENUM_COUNTS`` global is only a
   deprecated aggregate view);
-* the ``repro.service.cache`` / ``repro.service.batcher`` shims warn.
+* the removed ``repro.service.cache`` / ``repro.service.batcher`` shims
+  stay gone (ImportError, not a silent resurrection).
 """
 
 import importlib
@@ -286,29 +287,29 @@ def test_stream_counters_are_metric_views(graphs):
 
 
 # --------------------------------------------------------------------- #
-# Deprecation shims
+# Deprecation shims (removed in PR 9)
 # --------------------------------------------------------------------- #
 @pytest.mark.parametrize("mod", ["repro.service.cache", "repro.service.batcher"])
-def test_service_shims_warn_on_import(mod):
+def test_service_shims_are_gone(mod):
     sys.modules.pop(mod, None)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
+    with pytest.raises(ImportError):
         importlib.import_module(mod)
 
 
 def test_service_package_import_is_warning_free():
-    for mod in ("repro.service", "repro.service.cache", "repro.service.batcher"):
-        sys.modules.pop(mod, None)
+    sys.modules.pop("repro.service", None)
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         import repro.service  # noqa: F401
 
-        # the documented surface resolves without touching the shims
+        # the documented surface resolves without any shim
         assert callable(repro.service.bucket_for)
         assert repro.service.TrussService is not None
     assert "MicroBatcher" not in repro.service.__all__
-    # the lazy batcher names still resolve — through the warning shim
-    with pytest.warns(DeprecationWarning):
-        assert repro.service.MicroBatcher is not None
+    # the batcher's replacement lives in repro.api now
+    from repro.api import QueryQueue
+
+    assert QueryQueue is not None
 
 
 # --------------------------------------------------------------------- #
