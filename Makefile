@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs bench-kernels bench-serve lint
+.PHONY: test test-chaos bench-smoke bench-peel bench-stream bench-api bench-obs bench-kernels bench-serve lint lint-analysis
 
 # Tier-1 verify (see ROADMAP.md).
 test:
@@ -67,3 +67,10 @@ lint:
 	else \
 		echo "ruff not installed; skipped (pip install -r requirements-dev.txt)"; \
 	fi
+
+# Repo-native static analysis (rules R1-R6, see src/repro/analysis/).
+# Pure-stdlib AST pass: fails on any finding not in analysis/baseline.json
+# (which ships empty — the dispatch-path and serve layers are lint-clean)
+# and writes ANALYSIS_report.json for CI to archive.
+lint-analysis:
+	$(PYTHON) -m repro.analysis --report ANALYSIS_report.json

@@ -1,0 +1,54 @@
+"""repro.analysis — repo-native static-analysis suite.
+
+Six AST-based lint rules encode invariants the generic linters cannot
+see because they are *this repo's* invariants:
+
+========  ==============================================================
+R1        trace-purity: no host-side numpy / coercion / control flow on
+          traced values inside jit or pallas call graphs, and no
+          device->host readback on the dispatch path before ``.peel``.
+R2        recompile-hazard: every attribute a jitted builder closes
+          over must be folded into the compile-cache variant key.
+R3        lock-discipline: ``# guarded-by:`` annotated attributes only
+          touched under their lock; no blocking IO while holding a
+          non-``io-lock`` lock.
+R4        fault-site coverage: ``inject(site)`` literals exist in
+          ``FAULT_SITES`` and every site appears in at least one test.
+R5        metric-name drift: every metric name at every call site is
+          declared in ``repro.obs.names``.
+R6        wire-schema safety: error context whitelist stays in sync
+          with the ``repro.errors`` taxonomy and every error class is
+          re-raisable by name from a bare message.
+========  ==============================================================
+
+Findings carry stable fingerprints (line-number independent), so the
+checked-in ``analysis/baseline.json`` survives unrelated drift.  A
+finding is silenced either by the baseline or by a trailing
+``# trusslint: disable=R<n>`` comment on the flagged line.
+
+Run it: ``make lint-analysis`` or ``python -m repro.analysis``.
+"""
+
+from .engine import (
+    AnalysisConfig,
+    AnalysisContext,
+    Finding,
+    apply_baseline,
+    load_baseline,
+    render_text,
+    report_dict,
+    run,
+    write_baseline,
+)
+
+__all__ = [
+    "AnalysisConfig",
+    "AnalysisContext",
+    "Finding",
+    "apply_baseline",
+    "load_baseline",
+    "render_text",
+    "report_dict",
+    "run",
+    "write_baseline",
+]

@@ -1,0 +1,399 @@
+"""R1 — trace-purity.
+
+Two sub-checks:
+
+**Traced-function purity.** Functions that jax traces — wrapped by
+``jax.jit``, passed to ``lax.while_loop``/``scan``/``cond``/``fori_loop``/
+``map``/``switch`` or ``pl.pallas_call`` (through ``functools.partial``),
+or ``@jax.jit``-decorated — plus everything they call locally, must not:
+
+* call ``np.*`` on a traced array argument (host round-trip per call),
+* coerce a traced value with ``int()``/``float()``/``bool()``,
+* call ``.item()`` or ``.block_until_ready()`` at all,
+* branch (``if``/``while``) or iterate (``for``) on a traced value.
+
+"Traced array argument" is decided conservatively from annotations: only
+parameters whose annotation mentions ``Array``/``ndarray`` count, and
+accesses through ``.shape``/``.ndim``/``.dtype``/``.size``/``len()`` are
+static and exempt (trace-time constant math like
+``np.ceil(np.log2(w + 1))`` on shape-derived scalars is fine and common
+in the pallas kernels).  ``is None`` checks are control flow on
+*presence*, not value, and are exempt.
+
+**Dispatch-path readback.** In the configured dispatch files, flag
+``np.asarray``/``np.array``/``np.copy`` applied to packed device arrays
+(expressions mentioning ``.problem``) *before* the first ``.peel(`` call
+in the same function: a host sync on the dispatch critical path stalls
+the pipeline before the kernel is even launched.  Readbacks after
+dispatch are how results come home and are fine.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .engine import (
+    AnalysisContext,
+    Finding,
+    SourceFile,
+    build_parents,
+    call_name,
+    dotted_name,
+    scope_of,
+)
+
+RULE = "R1"
+
+_JIT_WRAPPERS = {"jax.jit", "jit", "pjit", "jax.pjit"}
+_TRACE_CONSUMERS = {
+    "jax.lax.while_loop",
+    "lax.while_loop",
+    "jax.lax.scan",
+    "lax.scan",
+    "jax.lax.cond",
+    "lax.cond",
+    "jax.lax.fori_loop",
+    "lax.fori_loop",
+    "jax.lax.map",
+    "lax.map",
+    "jax.lax.switch",
+    "lax.switch",
+    "pl.pallas_call",
+    "pallas_call",
+    "jax.experimental.pallas.pallas_call",
+    "checkpoint",
+    "jax.checkpoint",
+}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+_ARRAY_ANN_MARKERS = ("Array", "ndarray")
+_ALWAYS_BAD_METHODS = {"item", "block_until_ready"}
+_COERCIONS = {"int", "float", "bool", "complex"}
+_DISPATCH_READBACKS = {"np.asarray", "np.array", "np.copy", "numpy.asarray", "numpy.array"}
+
+
+class _Resolver:
+    """Lexically-scoped function-name resolution.
+
+    A bare ``peel`` inside ``build_peel`` must resolve to *that* nested
+    ``peel``, never to a same-named method or a sibling builder's local —
+    by-name file-wide matching seeds host driver loops as traced and
+    drowns the rule in false positives.
+    """
+
+    def __init__(self, tree: ast.AST, parents: dict[ast.AST, ast.AST]):
+        self.parents = parents
+        # function name -> defining scope (nearest enclosing function or
+        # module, skipping nothing: a ClassDef scope marks a method).
+        self.defs: dict[tuple[int, str], ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = self._enclosing_scope(node)
+                self.defs[(id(scope), node.name)] = node
+
+    def _enclosing_scope(self, node: ast.AST) -> ast.AST:
+        cur = self.parents.get(node)
+        while cur is not None and not isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Module)
+        ):
+            cur = self.parents.get(cur)
+        return cur
+
+    def resolve_name(self, name: str, at: ast.AST) -> ast.AST | None:
+        """Innermost visible function named ``name`` from site ``at``."""
+        scope = self._enclosing_scope(at)
+        while scope is not None:
+            if isinstance(scope, ast.ClassDef):
+                # class bodies don't contribute to nested lexical lookup
+                scope = self._enclosing_scope(scope)
+                continue
+            fn = self.defs.get((id(scope), name))
+            if fn is not None:
+                return fn
+            if isinstance(scope, ast.Module):
+                return None
+            scope = self._enclosing_scope(scope)
+        return None
+
+    def resolve_method(self, name: str, at: ast.AST) -> ast.AST | None:
+        """``self.<name>`` resolved against the enclosing class."""
+        cur = self.parents.get(at)
+        while cur is not None and not isinstance(cur, ast.ClassDef):
+            cur = self.parents.get(cur)
+        if cur is None:
+            return None
+        return self.defs.get((id(cur), name))
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """``functools.partial(f, ...)`` -> ``f``."""
+    if isinstance(node, ast.Call) and call_name(node) in (
+        "functools.partial",
+        "partial",
+    ):
+        if node.args:
+            return node.args[0]
+    return node
+
+
+def _seed_traced(tree: ast.AST, resolver: _Resolver) -> set[ast.AST]:
+    seeds: set[ast.AST] = set()
+
+    def add_ref(ref: ast.AST, at: ast.AST) -> None:
+        ref = _unwrap_partial(ref)
+        fn = None
+        if isinstance(ref, ast.Name):
+            fn = resolver.resolve_name(ref.id, at)
+        elif isinstance(ref, ast.Attribute) and (
+            isinstance(ref.value, ast.Name) and ref.value.id == "self"
+        ):
+            fn = resolver.resolve_method(ref.attr, at)
+        if fn is not None:
+            seeds.add(fn)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in _JIT_WRAPPERS:
+                for arg in node.args[:1]:
+                    add_ref(arg, node)
+                for kw in node.keywords:
+                    if kw.arg == "fun":
+                        add_ref(kw.value, node)
+            elif name in _TRACE_CONSUMERS:
+                for arg in node.args:
+                    add_ref(arg, node)
+                for kw in node.keywords:
+                    add_ref(kw.value, node)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                dname = call_name(dec) if isinstance(dec, ast.Call) else None
+                if dname is None and isinstance(dec, (ast.Name, ast.Attribute)):
+                    dname = dotted_name(dec)
+                if dname in _JIT_WRAPPERS:
+                    seeds.add(node)
+    return seeds
+
+
+def _propagate(seeds: set[ast.AST], resolver: _Resolver) -> set[ast.AST]:
+    """Extend seeds through direct local calls (``f(...)`` by bare name)."""
+    traced = set(seeds)
+    frontier = list(seeds)
+    while frontier:
+        fn = frontier.pop()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                callee = resolver.resolve_name(node.func.id, node)
+                if callee is not None and callee not in traced:
+                    traced.add(callee)
+                    frontier.append(callee)
+    return traced
+
+
+def _array_params(fn: ast.AST) -> set[str]:
+    names: set[str] = set()
+    args = fn.args
+    for a in [*args.posonlyargs, *args.args, *args.kwonlyargs]:
+        if a.annotation is not None:
+            try:
+                ann = ast.unparse(a.annotation)
+            except Exception:
+                continue
+            if any(marker in ann for marker in _ARRAY_ANN_MARKERS):
+                names.add(a.arg)
+    return names
+
+
+def _dynamic_array_ref(
+    expr: ast.AST, array_params: set[str], parents: dict[ast.AST, ast.AST]
+) -> bool:
+    """Does ``expr`` reference an array param *as a value* (not just its
+    static metadata)?"""
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Name) and node.id in array_params):
+            continue
+        static = False
+        cur: ast.AST = node
+        parent = parents.get(cur)
+        while parent is not None:
+            if isinstance(parent, ast.Attribute) and parent.value is cur:
+                if parent.attr in _STATIC_ATTRS:
+                    static = True
+                break
+            if isinstance(parent, ast.Call) and isinstance(parent.func, ast.Name):
+                if parent.func.id in ("len", "isinstance", "type"):
+                    static = True
+                    break
+            if isinstance(parent, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in parent.ops
+            ):
+                static = True
+                break
+            if parent is expr:
+                break
+            cur, parent = parent, parents.get(parent)
+        if not static:
+            return True
+    return False
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` (possibly and/or-combined)."""
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_check(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_none_check(test.operand)
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    )
+
+
+def _check_traced_fn(
+    sf: SourceFile,
+    fn: ast.AST,
+    parents: dict[ast.AST, ast.AST],
+) -> list[Finding]:
+    findings: list[Finding] = []
+    array_params = _array_params(fn)
+    scope = scope_of(fn, parents)
+
+    def emit(node: ast.AST, message: str) -> None:
+        findings.append(
+            Finding(
+                rule=RULE,
+                path=sf.rel,
+                line=node.lineno,
+                scope=scope,
+                message=message,
+                snippet=sf.line_text(node.lineno),
+            )
+        )
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _ALWAYS_BAD_METHODS
+            ):
+                emit(
+                    node,
+                    f".{node.func.attr}() forces a host sync inside a traced "
+                    "function",
+                )
+            elif name == "jax.block_until_ready":
+                emit(node, "jax.block_until_ready() inside a traced function")
+            elif name is not None and (
+                name.startswith("np.") or name.startswith("numpy.")
+            ):
+                if array_params and any(
+                    _dynamic_array_ref(arg, array_params, parents)
+                    for arg in [*node.args, *[kw.value for kw in node.keywords]]
+                ):
+                    emit(
+                        node,
+                        f"{name}() on a traced array argument (host numpy "
+                        "inside a traced function; use jnp)",
+                    )
+            elif (
+                name in _COERCIONS
+                and array_params
+                and node.args
+                and _dynamic_array_ref(node.args[0], array_params, parents)
+            ):
+                emit(
+                    node,
+                    f"{name}() coerces a traced value to a Python scalar "
+                    "(implicit device sync / ConcretizationTypeError)",
+                )
+        elif isinstance(node, (ast.If, ast.While)):
+            if (
+                array_params
+                and not _is_none_check(node.test)
+                and _dynamic_array_ref(node.test, array_params, parents)
+            ):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                emit(
+                    node,
+                    f"Python `{kind}` on a traced value (use lax.cond / "
+                    "jnp.where)",
+                )
+        elif isinstance(node, ast.For):
+            if array_params and _dynamic_array_ref(node.iter, array_params, parents):
+                emit(
+                    node,
+                    "Python `for` over a traced value (use lax.fori_loop / "
+                    "lax.scan)",
+                )
+    return findings
+
+
+def _check_dispatch_file(sf: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    parents = build_parents(sf.tree)
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        peel_lines = [
+            node.lineno
+            for node in ast.walk(fn)
+            if isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "peel"
+        ]
+        if not peel_lines:
+            continue
+        first_dispatch = min(peel_lines)
+        scope = scope_of(fn, parents)
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call) and node.lineno < first_dispatch):
+                continue
+            if call_name(node) not in _DISPATCH_READBACKS or not node.args:
+                continue
+            touches_packed = any(
+                isinstance(sub, ast.Attribute) and sub.attr == "problem"
+                for sub in ast.walk(node.args[0])
+            )
+            if touches_packed:
+                findings.append(
+                    Finding(
+                        rule=RULE,
+                        path=sf.rel,
+                        line=node.lineno,
+                        scope=scope,
+                        message=(
+                            f"{call_name(node)}() reads a packed device array "
+                            "back to host before dispatch (blocks the dispatch "
+                            "path on a device sync)"
+                        ),
+                        snippet=sf.line_text(node.lineno),
+                    )
+                )
+    return findings
+
+
+def check(ctx: AnalysisContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for rel in ctx.config.trace_files:
+        sf = ctx.get(rel)
+        if sf is None:
+            continue
+        parents = build_parents(sf.tree)
+        resolver = _Resolver(sf.tree, parents)
+        traced = _propagate(_seed_traced(sf.tree, resolver), resolver)
+        # Skip traced fns nested inside another traced fn: the outer walk
+        # already visits their bodies.
+        for fn in traced:
+            enclosing = parents.get(fn)
+            skip = False
+            while enclosing is not None:
+                if enclosing in traced:
+                    skip = True
+                    break
+                enclosing = parents.get(enclosing)
+            if not skip:
+                findings.extend(_check_traced_fn(sf, fn, parents))
+    for rel in ctx.config.dispatch_files:
+        sf = ctx.get(rel)
+        if sf is not None:
+            findings.extend(_check_dispatch_file(sf))
+    return findings

@@ -1,0 +1,87 @@
+"""Runtime recompile sentinel — the dynamic half of the R2 rule.
+
+The static rule proves the variant key *covers* what the builder closes
+over; this sentinel proves the warm path actually *hits* the cache: it
+registers a :mod:`jax.monitoring` event listener and counts XLA
+compilations, so a test can solve the same query mix twice and assert
+the second pass compiled nothing.
+
+This is also the first piece of the observed-cost feedback loop on the
+roadmap: the same listener machinery that counts compile events here is
+where observed ``device_time_s`` per (bucket, backend) will be tapped to
+replace the analytic cost model's constants.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+__all__ = ["COMPILE_EVENTS", "CompileLog", "count_compiles", "assert_no_compiles"]
+
+# Events jax emits once per XLA compilation (cache-miss path).  Warm
+# executions emit none of these.
+COMPILE_EVENTS = (
+    "/jax/compilation_cache/compile_requests_use_cache",
+    "/jax/pjit/compile",  # older/newer jax spellings; either counts
+)
+
+
+class CompileLog:
+    """Callable event listener accumulating compile events."""
+
+    def __init__(self) -> None:
+        self.events: list[str] = []
+
+    @property
+    def compiles(self) -> int:
+        return len(self.events)
+
+    def __call__(self, event: str, *args, **kwargs) -> None:
+        if event in COMPILE_EVENTS:
+            self.events.append(event)
+
+
+def _unregister(log: CompileLog) -> None:
+    from jax._src import monitoring as _monitoring
+
+    unregister = getattr(_monitoring, "_unregister_event_listener_by_callback", None)
+    if unregister is not None:
+        unregister(log)
+        return
+    listeners = getattr(_monitoring, "_event_listeners", None)
+    if isinstance(listeners, list) and log in listeners:  # pragma: no cover
+        listeners.remove(log)
+
+
+@contextlib.contextmanager
+def count_compiles() -> Iterator[CompileLog]:
+    """Context manager yielding a :class:`CompileLog` counting XLA
+    compilations that happen inside the block."""
+    from jax import monitoring
+
+    log = CompileLog()
+    monitoring.register_event_listener(log)
+    try:
+        yield log
+    finally:
+        _unregister(log)
+
+
+@contextlib.contextmanager
+def assert_no_compiles(what: str = "warm path") -> Iterator[CompileLog]:
+    """Assert that the block triggers zero XLA compilations.
+
+    Usage::
+
+        with assert_no_compiles("second solve of identical mix"):
+            session.solve(query)
+    """
+    with count_compiles() as log:
+        yield log
+    if log.compiles:
+        raise AssertionError(
+            f"{what}: {log.compiles} unexpected XLA compilation(s) — "
+            "a compile-cache variant-key dimension is leaking (see R2 in "
+            "repro.analysis)"
+        )

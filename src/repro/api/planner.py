@@ -187,14 +187,14 @@ class Planner:
                 f"backend {self.backend} keeps peel state kernel-resident "
                 "and cannot shard across a mesh; use fine/pallas/aligned"
             )
-        self._slot_ids: dict[tuple[int, int], Any] = {}
-        # Observability: planning overhead + which backend each bucket got.
-        # Guarded by _stats_lock — concurrent submitters (the serving
-        # tier's connection threads) all assign through one planner.
+        # Observability + shared caches.  Concurrent submitters (the
+        # serving tier's connection threads) all assign through one
+        # planner, so everything mutable below is lock-guarded.
         self._stats_lock = threading.Lock()
-        self.queries_planned = 0
-        self.plan_time_s = 0.0
-        self.backend_choices: dict[tuple[Bucket, BackendKey], int] = {}
+        self._slot_ids: dict[tuple[int, int], Any] = {}  # guarded-by: _stats_lock
+        self.queries_planned = 0  # guarded-by: _stats_lock
+        self.plan_time_s = 0.0  # guarded-by: _stats_lock
+        self.backend_choices: dict[tuple[Bucket, BackendKey], int] = {}  # guarded-by: _stats_lock
 
     # ------------------------------------------------------------------ #
     # Assignment: query -> (bucket, backend)
@@ -292,14 +292,29 @@ class Planner:
     ):
         """What beyond (bucket, slots) specializes the executable.
 
-        Fused backends fold the bucket's autotuned kernel config
-        (``repro.kernels.autotune.lookup``) into the key, so a newly
-        tuned block/schedule compiles its own executable instead of
-        silently reusing a stale one."""
+        Every planner attribute ``build_executor`` closes over MUST be
+        folded in here (``mesh`` rides as its hashable ``_mesh_key``) —
+        a closed-over scalar missing from this tuple is a recompile
+        hazard: two configs would share one cache row and the second
+        would silently reuse the first's executable.  The R2 lint
+        (``repro.analysis.rules_recompile``) enforces the invariant.
+
+        Fused backends additionally fold the bucket's autotuned kernel
+        config (``repro.kernels.autotune.lookup``) into the key, so a
+        newly tuned block/schedule compiles its own executable instead
+        of silently reusing a stale one."""
+        fused_sig = None
         if backend.kernel == "fused" and bucket is not None:
             cfg = self.fused_config_for(bucket, slots or self.max_batch)
-            return (backend, self.mode, self._mesh_key, cfg.signature())
-        return (backend, self.mode, self._mesh_key, None)
+            fused_sig = cfg.signature()
+        return (
+            backend,
+            self.mode,
+            self._mesh_key,
+            self.chunk,
+            self.max_iters,
+            fused_sig,
+        )
 
     def fused_config_for(self, bucket: Bucket, slots: int):
         """The fused tuning point for one (bucket, slots): the persisted
@@ -310,8 +325,14 @@ class Planner:
         return autotune.lookup(bucket, slots).clamp(bucket.nnz_pad)
 
     def build_executor(self, key: tuple[Bucket, int, Any]):
-        """Compile-cache builder: one peel executor per cache key."""
-        bucket, _slots, (backend, mode, _mesh_key, fused_sig) = key
+        """Compile-cache builder: one peel executor per cache key.
+
+        ``chunk``/``max_iters`` are read from the key, not ``self`` —
+        every non-static input that specializes the executable must
+        arrive through the variant tuple (see :meth:`cache_variant`).
+        ``self.mesh`` is the one closed-over object (unhashable), keyed
+        by its ``_mesh_key`` fold."""
+        bucket, _slots, (backend, mode, _mesh_key, chunk, max_iters, fused_sig) = key
         fused_config = None
         if fused_sig is not None:
             from ..kernels.autotune import FusedConfig
@@ -319,8 +340,8 @@ class Planner:
             fused_config = FusedConfig.from_signature(fused_sig)
         return get_backend(backend).make_executor(
             window=bucket.window,
-            chunk=self.chunk,
-            max_iters=self.max_iters,
+            chunk=chunk,
+            max_iters=max_iters,
             mesh=self.mesh,
             mode=mode,
             fused_config=fused_config,
@@ -331,16 +352,22 @@ class Planner:
         if batch.backend.layout == "aligned":
             # Lane blocks are slot blocks: one cached id vector per shape.
             cache_key = (batch.slots, batch.bucket.nnz_pad)
-            ids = self._slot_ids.get(cache_key)
+            with self._stats_lock:
+                ids = self._slot_ids.get(cache_key)
             if ids is None:
                 import jax.numpy as jnp
 
-                ids = self._slot_ids[cache_key] = jnp.asarray(
+                ids = jnp.asarray(
                     np.repeat(
                         np.arange(batch.slots, dtype=np.int32),
                         batch.bucket.nnz_pad,
                     )
                 )
+                with self._stats_lock:
+                    # Two threads may build the same vector concurrently;
+                    # first writer wins so every batch shares one device
+                    # array per shape.
+                    ids = self._slot_ids.setdefault(cache_key, ids)
             return ids
         # Contig layout: members are prefix-packed, so slot ownership
         # depends on this batch's member sizes.  Pad-tail lanes are dead
@@ -410,9 +437,18 @@ class Planner:
         if any(st.query.workload == "stream_update" for st in queries):
             import jax.numpy as jnp
 
-            alive_np = np.asarray(packed.problem.colidx) != 0
-            frozen_np = np.zeros(alive_np.shape[0], bool)
-            ft_np = np.zeros(alive_np.shape[0], np.int32)
+            # The default alive mask ("every real lane") is a pure
+            # function of the pack's host-side edge ranges: pad lanes sit
+            # outside every member's range (colidx == 0 there, see
+            # graphs.pack).  Building it from edge_ranges avoids a
+            # device->host colidx readback on the request path, which
+            # would serialize packing with the previous dispatch.
+            nnzp = int(packed.problem.colidx.shape[0])
+            alive_np = np.zeros(nnzp, bool)
+            for a, b in packed.edge_ranges:
+                alive_np[a:b] = True
+            frozen_np = np.zeros(nnzp, bool)
+            ft_np = np.zeros(nnzp, np.int32)
             for st, (a, b) in zip(queries, packed.edge_ranges):
                 if st.query.workload != "stream_update":
                     continue

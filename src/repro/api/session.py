@@ -159,14 +159,15 @@ class TrussFuture:
             if timeout is not None and waited >= timeout:
                 session._record_deadline_miss(self._state, waited)
                 shed = session.shed_on_timeout
+                depth = session.queue_depth()
                 err = TrussTimeoutError(
                     f"query {self._state.id} ({self._state.query.workload}) "
                     f"unresolved after {waited:.3f}s (timeout={timeout}s); "
                     f"bucket={self._state.bucket}, "
-                    f"queue_depth={len(session.queue)}"
+                    f"queue_depth={depth}"
                     + ("; query shed" if shed else ""),
                     bucket=self._state.bucket,
-                    queue_depth=len(session.queue),
+                    queue_depth=depth,
                     request_id=self._state.id,
                     waited_s=waited,
                     shed=shed,
@@ -282,15 +283,15 @@ class Session:
         self.cache = CompileCache(
             self.planner.build_executor, metrics=self.obs.metrics
         )
-        self.queue = QueryQueue(max_batch=max_batch)
-        self._futures: dict[int, TrussFuture] = {}
         # Thread safety: the RPC serving tier drives one Session from many
         # connection threads, so the batch former, the futures map and the
         # in-flight set share one condition variable.  Batch *dispatches*
         # deliberately run outside the lock (device time dominates; only
         # queue/future state needs exclusion).
         self._cv = threading.Condition()
-        self._inflight: set[int] = set()
+        self.queue = QueryQueue(max_batch=max_batch)  # guarded-by: _cv
+        self._futures: dict[int, TrussFuture] = {}  # guarded-by: _cv
+        self._inflight: set[int] = set()  # guarded-by: _cv
         self.faults = faults if faults is not None else FaultPlan.from_env()
         self.retry = retry or RetryPolicy()
         self.shed_on_timeout = bool(shed_on_timeout)
@@ -383,7 +384,8 @@ class Session:
         with self._cv:
             self._futures[state.id] = fut
             self.queue.enqueue(state)
-        self.obs.metrics.set_gauge("queue_depth", len(self.queue))
+            depth = len(self.queue)
+        self.obs.metrics.set_gauge("queue_depth", depth)
         return fut
 
     def solve(self, queries) -> list[Any]:
@@ -461,10 +463,15 @@ class Session:
             return 0
         return self._run_batch(self._planned(batch))
 
+    def queue_depth(self) -> int:
+        """Pending-query count, read under the session lock."""
+        with self._cv:
+            return len(self.queue)
+
     def flush(self) -> int:
         """Drain the queue; returns how many queries resolved."""
         n = 0
-        while len(self.queue):
+        while self.queue_depth():
             n += self.poll()
         self.obs.export_trace()  # no-op unless a trace path is configured
         return n
@@ -538,9 +545,10 @@ class Session:
             self._inflight.discard(state.id)
             if fut is not None:
                 fut._fail(err)
+            depth = len(self.queue)
             self._cv.notify_all()
         self.obs.metrics.inc("queries_shed")
-        self.obs.metrics.set_gauge("queue_depth", len(self.queue))
+        self.obs.metrics.set_gauge("queue_depth", depth)
 
     def _run_batch(self, planned: PlannedBatch) -> int:
         batch = planned.queries
@@ -573,8 +581,9 @@ class Session:
                 else:
                     m.inc("queries_failed")
                     fut._fail(out.error)
+            depth = len(self.queue)
             self._cv.notify_all()
-        m.set_gauge("queue_depth", len(self.queue))
+        m.set_gauge("queue_depth", depth)
         return len(batch)
 
     def _record_deadline_miss(self, state: QueryState, waited_s: float) -> None:
@@ -597,7 +606,7 @@ class Session:
             "batches_run": self.batches_run,
             "device_dispatches": self.device_dispatches,
             "deadline_misses": self.deadline_misses,
-            "pending": len(self.queue),
+            "pending": self.queue_depth(),
             "device_time_s": round(self.device_time_s, 6),
             "retries": self.retries,
             "backend_fallbacks": self.backend_fallbacks,

@@ -56,10 +56,54 @@ def _label_key(labels: Mapping[str, object]) -> _LabelKey:
     return tuple(sorted((k, str(v)) for k, v in labels.items()))
 
 
+def _escape_label(value: str) -> str:
+    """Backslash-escape the characters ``_fmt_key`` uses structurally."""
+    return (
+        value.replace("\\", "\\\\").replace(",", "\\,").replace("=", "\\=")
+    )
+
+
+def _split_unescaped(text: str, sep: str) -> list[str]:
+    """Split on ``sep`` occurrences not preceded by a backslash escape."""
+    parts: list[str] = []
+    buf: list[str] = []
+    i = 0
+    while i < len(text):
+        c = text[i]
+        if c == "\\" and i + 1 < len(text):
+            buf.append(c)
+            buf.append(text[i + 1])
+            i += 2
+            continue
+        if c == sep:
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(c)
+        i += 1
+    parts.append("".join(buf))
+    return parts
+
+
+def _unescape_label(value: str) -> str:
+    out: list[str] = []
+    i = 0
+    while i < len(value):
+        if value[i] == "\\" and i + 1 < len(value):
+            out.append(value[i + 1])
+            i += 2
+        else:
+            out.append(value[i])
+            i += 1
+    return "".join(out)
+
+
 def _fmt_key(name: str, labels: _LabelKey) -> str:
     if not labels:
         return name
-    inner = ",".join(f"{k}={v}" for k, v in labels)
+    # Label values are escaped so a value containing "," or "=" (graph
+    # names, backend strings) still round-trips through _parse_key.
+    inner = ",".join(f"{k}={_escape_label(v)}" for k, v in labels)
     return f"{name}{{{inner}}}"
 
 
@@ -69,10 +113,12 @@ def _parse_key(key: str) -> tuple[str, dict[str, str]]:
         return key, {}
     name, inner = key.split("{", 1)
     labels: dict[str, str] = {}
-    for pair in inner[:-1].split(","):
+    for pair in _split_unescaped(inner[:-1], ","):
         if pair:
-            k, _, v = pair.partition("=")
-            labels[k] = v
+            # Split on the first unescaped "=": the key never contains
+            # one, and "="s inside the value arrive escaped.
+            head, *rest = _split_unescaped(pair, "=")
+            labels[_unescape_label(head)] = _unescape_label("=".join(rest))
     return name, labels
 
 

@@ -131,7 +131,7 @@ def save_checkpoint(
             os.unlink(tmp)
         except OSError:
             pass
-        raise CheckpointError(f"checkpoint write failed: {e}", path=path, cause=e)
+        raise CheckpointError(f"checkpoint write failed: {e}", path=path, cause=e) from e
     return path
 
 
@@ -141,13 +141,13 @@ def load_checkpoint(path: str) -> Checkpoint:
         with np.load(path) as z:
             data = {k: z[k] for k in z.files}
     except (OSError, ValueError, zlib.error) as e:
-        raise CheckpointError(f"checkpoint unreadable: {e}", path=path, cause=e)
+        raise CheckpointError(f"checkpoint unreadable: {e}", path=path, cause=e) from e
     if "meta" not in data:
         raise CheckpointError("checkpoint has no meta record", path=path)
     try:
         meta = json.loads(bytes(data.pop("meta")).decode())
     except (UnicodeDecodeError, json.JSONDecodeError) as e:
-        raise CheckpointError(f"checkpoint meta is corrupt: {e}", path=path, cause=e)
+        raise CheckpointError(f"checkpoint meta is corrupt: {e}", path=path, cause=e) from e
     version = meta.get("version")
     if version != CHECKPOINT_VERSION:
         raise CheckpointError(
@@ -177,7 +177,7 @@ def load_checkpoint(path: str) -> Checkpoint:
     except ValueError as e:
         raise CheckpointError(
             f"checkpoint graph fails CSR validation: {e}", path=path, cause=e
-        )
+        ) from e
     trussness = np.asarray(data["trussness"], np.int32)
     if trussness.shape[0] != graph.nnz:
         raise CheckpointError(

@@ -158,7 +158,7 @@ def health_report(
     }
     return HealthReport(
         name=name,
-        queue_depth=len(session.queue),
+        queue_depth=session.queue_depth(),
         live_queries=int(live_queries),
         requests_served=session.requests_served,
         queries_shed=session.queries_shed,
@@ -200,14 +200,18 @@ class Replica:
             cache_dir=config.cache_dir,
         )
         self.warmup_queries = 0
-        self._live = 0  # unresolved queries (admission control)
         self._live_lock = threading.Lock()
-        self._futures: dict[int, Any] = {}
-        self._streams: dict[str, Any] = {}
-        self._stream_seq: dict[str, int] = {}
-        self._stream_locks: dict[str, threading.Lock] = {}
-        self._stream_lock = threading.Lock()  # map membership only
-        self._draining = False
+        self._live = 0  # unresolved queries (admission control); guarded-by: _live_lock
+        self._futures_lock = threading.Lock()
+        self._futures: dict[int, Any] = {}  # guarded-by: _futures_lock
+        # _stream_lock guards map membership AND the per-stream sequence
+        # numbers; the per-stream locks in _stream_locks serialize the
+        # device work of one stream's updates without blocking the rest.
+        self._stream_lock = threading.Lock()
+        self._streams: dict[str, Any] = {}  # guarded-by: _stream_lock
+        self._stream_seq: dict[str, int] = {}  # guarded-by: _stream_lock
+        self._stream_locks: dict[str, threading.Lock] = {}  # guarded-by: _stream_lock
+        self._draining = False  # monotonic latch; racy reads only delay the cutover
         self._stop = threading.Event()
         self._sock: socket.socket | None = None
 
@@ -311,7 +315,7 @@ class Replica:
                 raise TrussTimeoutError(
                     f"replica {self.config.name} at max_live="
                     f"{self.config.max_live}; query shed",
-                    queue_depth=len(self.session.queue),
+                    queue_depth=self.session.queue_depth(),
                     shed=True,
                 )
             self._live += 1
@@ -321,12 +325,14 @@ class Replica:
             with self._live_lock:
                 self._live -= 1
             raise
-        self._futures[fut.request.id] = fut
+        with self._futures_lock:
+            self._futures[fut.request.id] = fut
         return {"qid": fut.request.id}
 
     def _op_result(self, msg: dict) -> dict:
         qid = int(msg["qid"])
-        fut = self._futures.pop(qid, None)
+        with self._futures_lock:
+            fut = self._futures.pop(qid, None)
         if fut is None:
             raise KeyError(f"unknown or already-collected qid {qid}")
         try:
@@ -395,11 +401,11 @@ class Replica:
         )
         with self._stream_lock:
             self._streams[sid] = stream
-            self._stream_seq[sid] = stream.updates_total
+            seq = self._stream_seq[sid] = stream.updates_total
             self._stream_locks[sid] = threading.Lock()
         return {
             "stream_id": sid,
-            "seq": self._stream_seq[sid],
+            "seq": seq,
             **self._stream_state(stream),
         }
 
@@ -416,9 +422,12 @@ class Replica:
             raise KeyError(f"replica does not own stream {sid!r}")
         # Per-stream lock: updates on one stream serialize (deltas are
         # relative to the committed graph) without blocking health polls
-        # or other streams behind a device dispatch.
+        # or other streams behind a device dispatch.  The sequence map
+        # itself stays under _stream_lock — one guard per attribute, not
+        # one per path (the R3 lint checks exactly this).
         with lock:
-            applied = self._stream_seq[sid]
+            with self._stream_lock:
+                applied = self._stream_seq[sid]
             if seq <= applied:
                 # Idempotent replay: the update committed (and was
                 # checkpointed) but the ack was lost — re-acking the
@@ -438,7 +447,8 @@ class Replica:
                 decode_array(msg["deletes"]).reshape(-1, 2),
             )
             res = stream.update(batch)
-            self._stream_seq[sid] = seq
+            with self._stream_lock:
+                self._stream_seq[sid] = seq
             return {
                 "stream_id": sid,
                 "seq": seq,
@@ -451,10 +461,12 @@ class Replica:
     def health(self) -> HealthReport:
         with self._stream_lock:
             streams = tuple(sorted(self._streams))
+        with self._live_lock:
+            live = self._live
         return health_report(
             self.session,
             name=self.config.name,
-            live_queries=self._live,
+            live_queries=live,
             warmup_queries=self.warmup_queries,
             draining=self._draining,
             streams=streams,

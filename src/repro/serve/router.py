@@ -57,14 +57,16 @@ class ReplicaHandle:
         self.host = host
         self.port = int(port)
         self.timeout_s = float(timeout_s)
-        self._sock: socket.socket | None = None
-        self._lock = threading.Lock()
+        # io-lock: held regions deliberately do socket IO — one frame in
+        # flight per connection is the serialization this lock provides.
+        self._lock = threading.Lock()  # trusslint: io-lock
+        self._sock: socket.socket | None = None  # guarded-by: _lock
 
     def connect(self) -> None:
         with self._lock:
             self._connect_locked()
 
-    def _connect_locked(self) -> None:
+    def _connect_locked(self) -> None:  # requires-lock: _lock
         if self._sock is not None:
             return
         s = socket.create_connection((self.host, self.port), timeout=self.timeout_s)
@@ -177,17 +179,18 @@ class Router:
             parent=metrics if metrics is not None else get_registry()
         )
         self._lock = threading.RLock()
-        self._replicas: dict[str, ReplicaHandle] = {}
-        self._replica_metrics: dict[str, MetricsRegistry] = {}
-        self._affinity: dict[str, str] = {}  # bucket label -> replica name
-        self._quarantined: set[str] = set()
-        self._inflight: dict[str, int] = {}
-        self._health_fails: dict[str, int] = {}
-        self._last_health: dict[str, HealthReport] = {}
-        for r in replicas:
-            self._register(r)
+        self._replicas: dict[str, ReplicaHandle] = {}  # guarded-by: _lock
+        self._replica_metrics: dict[str, MetricsRegistry] = {}  # guarded-by: _lock
+        self._affinity: dict[str, str] = {}  # bucket label -> replica name; guarded-by: _lock
+        self._quarantined: set[str] = set()  # guarded-by: _lock
+        self._inflight: dict[str, int] = {}  # guarded-by: _lock
+        self._health_fails: dict[str, int] = {}  # guarded-by: _lock
+        self._last_health: dict[str, HealthReport] = {}  # guarded-by: _lock
+        with self._lock:
+            for r in replicas:
+                self._register(r)
 
-    def _register(self, handle: ReplicaHandle) -> None:
+    def _register(self, handle: ReplicaHandle) -> None:  # requires-lock: _lock
         self._replicas[handle.name] = handle
         # Chained per-replica registry: replica-scoped series roll up into
         # the router's aggregate exactly like session registries roll up
@@ -249,7 +252,7 @@ class Router:
     def bucket_of(self, query) -> str:
         return bucket_str(bucket_for(query.graph, chunk=self.chunk))
 
-    def _least_loaded(self, exclude: set[str] = frozenset()) -> str | None:
+    def _least_loaded(self, exclude: set[str] = frozenset()) -> str | None:  # requires-lock: _lock
         candidates = [
             (self._inflight.get(n, 0), i, n)
             for i, n in enumerate(self._replicas)
@@ -257,7 +260,7 @@ class Router:
         ]
         return min(candidates)[2] if candidates else None
 
-    def _warm_owner(self, bucket: str) -> str | None:
+    def _warm_owner(self, bucket: str) -> str | None:  # requires-lock: _lock
         """A healthy replica whose last health report shows ``bucket``
         already compiled (affinity learned from observed state)."""
         for name, report in self._last_health.items():
@@ -361,9 +364,15 @@ class Router:
         """Poll every non-quarantined replica; failures count toward
         quarantine.  Returns the reports that succeeded."""
         reports: dict[str, HealthReport] = {}
-        for name, handle in list(self._replicas.items()):
-            if self.is_quarantined(name):
-                continue
+        with self._lock:
+            targets = [
+                (n, h)
+                for n, h in self._replicas.items()
+                if n not in self._quarantined
+            ]
+        # The RPCs themselves run unlocked — a slow replica's health poll
+        # must not stall routing decisions on the lock.
+        for name, handle in targets:
             try:
                 report = handle.health()
             except (ConnectionError, DeviceError) as e:
@@ -373,7 +382,7 @@ class Router:
             with self._lock:
                 self._health_fails[name] = 0
                 self._last_health[name] = report
-            rm = self._replica_metrics[name]
+                rm = self._replica_metrics[name]
             rm.set_gauge("replica_queue_depth", report.queue_depth, replica=name)
             rm.set_gauge("replica_live_queries", report.live_queries, replica=name)
             rm.set_gauge(
@@ -432,7 +441,10 @@ class Router:
                     self._affinity[bucket] = heir
                     self.metrics.inc("router_affinity_redistributed")
             report = self._last_health.get(name)
-        self._replicas[name].close()
+            handle = self._replicas[name]
+        # Socket teardown outside the routing lock: close() can block on
+        # a dying peer, and pick()/poll_health() must not wait behind it.
+        handle.close()
         return tuple(report.streams) if report is not None else ()
 
     def reinstate(self, name: str, handle: ReplicaHandle | None = None) -> None:
@@ -450,5 +462,7 @@ class Router:
             self._last_health.pop(name, None)
 
     def close(self) -> None:
-        for handle in self._replicas.values():
+        with self._lock:
+            handles = list(self._replicas.values())
+        for handle in handles:
             handle.close()

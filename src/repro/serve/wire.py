@@ -241,6 +241,20 @@ _ERROR_CONTEXT = (
     "attempts",
 )
 
+# Scalar constructor params deliberately NOT carried across the wire.
+# The R6 lint (repro.analysis.rules_wire) requires every scalar-annotated
+# error-class param to be whitelisted above or excluded here, with a
+# reason:
+#   query_id — TrussTimeoutError forwards request_id as query_id to its
+#     base; carrying both would pass query_id twice (a ctor TypeError
+#     that degrades the whole context to a bare message).
+#   graph — a member graph's *name*; the row/kind fields already
+#     attribute the failure, and names can be arbitrarily large.
+_ERROR_CONTEXT_EXCLUDED = (
+    "query_id",
+    "graph",
+)
+
 
 def encode_error(e: BaseException) -> dict:
     rec: dict = {"type": type(e).__name__, "message": str(e)}

@@ -1,0 +1,4 @@
+# Known-bad fixture corpus for tests/test_analysis.py.  Every file here
+# violates exactly one rule on purpose; the default analysis config
+# excludes this directory, and tests/test_analysis.py re-points each
+# rule at its fixture and asserts the exact findings.

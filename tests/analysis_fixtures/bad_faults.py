@@ -1,0 +1,17 @@
+"""R4 fixture: a typo'd inject() site plus a declared-but-untested one.
+
+``FAULT_SITES`` here shadows the real declaration when the fixture
+config points R4 at this file.
+"""
+
+FAULT_SITES = ("compile", "ghost_town")
+
+
+def inject(site, **ctx):
+    return None
+
+
+def work():
+    inject("compile")  # declared: fine
+    inject("dispatchh")  # typo'd site: can never be armed
+    inject(site="poisonn")  # keyword form is checked too

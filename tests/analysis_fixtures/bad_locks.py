@@ -1,0 +1,37 @@
+"""R3 fixture: one unguarded access, one blocking call under a lock,
+one requires-lock method called bare."""
+
+import threading
+
+
+def send_msg(sock, msg):
+    return None
+
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}  # guarded-by: _lock
+        self._sock = None
+
+    def good(self, k):
+        with self._lock:
+            return self._items.get(k)
+
+    def bad_unlocked(self, k):
+        return self._items.get(k)
+
+    def bad_io_under_lock(self, msg):
+        with self._lock:
+            self._items["last"] = msg
+            send_msg(self._sock, msg)
+
+    def _helper(self):  # requires-lock: _lock
+        return len(self._items)
+
+    def good_requires_call(self):
+        with self._lock:
+            return self._helper()
+
+    def bad_requires_call(self):
+        return self._helper()

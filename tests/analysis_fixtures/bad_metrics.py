@@ -1,0 +1,19 @@
+"""R5 fixture: metric names the registry never declared."""
+
+
+class FakeRegistry:
+    def inc(self, name, value=1, **labels):
+        return None
+
+    def ingest(self, snapshot, **labels):
+        return None
+
+    def observe(self, name, value, **labels):
+        return None
+
+
+def work(m: FakeRegistry):
+    m.inc("requests_served")  # declared: fine
+    m.inc("requests_servd")  # typo
+    m.observe("peel_device_time_ms", 0.1)  # wrong unit suffix
+    m.ingest({"replica_requests_servd": 1})  # typo'd ingest key

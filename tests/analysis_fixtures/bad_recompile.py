@@ -1,0 +1,23 @@
+"""R2 fixture: a builder closing over attributes its variant key does
+not fold.  ``self.mode`` is keyed, ``self.mesh`` rides via an alias;
+``self.chunk`` and ``self.window`` are the leaks."""
+
+
+class LeakyPlanner:
+    def __init__(self, mode, chunk, window, mesh):
+        self.mode = mode
+        self.chunk = chunk
+        self.window = window
+        self.mesh = mesh
+        self._mesh_key = str(mesh)
+
+    def cache_variant(self):
+        return (self.mode, self._mesh_key)
+
+    def build_executor(self, bucket):
+        return {
+            "mode": self.mode,
+            "chunk": self.chunk,  # not in cache_variant: leak
+            "window": self.window,  # not in cache_variant: leak
+            "mesh": self.mesh,  # covered by the _mesh_key alias
+        }

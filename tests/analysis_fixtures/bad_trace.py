@@ -1,0 +1,26 @@
+"""R1 fixture: host impurities inside a traced function, and a
+device->host readback on the dispatch path.  Never imported."""
+
+import jax
+import numpy as np
+
+
+def make(step):
+    def body(x: jax.Array, n: int):
+        if x > 0:  # Python branch on a traced value
+            x = x + 1
+        y = np.abs(x)  # host numpy on a traced array
+        z = float(x)  # scalar coercion of a traced value
+        w = x.item()  # explicit host sync
+        pad = np.zeros(x.shape)  # shape-derived: static, must NOT flag
+        if n > 2:  # plain-int param: must NOT flag
+            z = z + 1
+        return y + z + w + pad.sum()
+
+    return jax.jit(body)
+
+
+def dispatch(exe, packed):
+    mask = np.asarray(packed.problem.colidx) != 0  # readback pre-dispatch
+    st = exe.peel(mask)
+    return np.asarray(st.alive)  # post-dispatch readback: fine

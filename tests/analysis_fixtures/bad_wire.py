@@ -1,0 +1,24 @@
+"""R6 fixture: doubles as both the "wire" file (whitelists) and the
+"errors" file (taxonomy) for the rule's three checks."""
+
+__all__ = ["AlphaError", "BetaError"]
+
+_ERROR_CONTEXT = (
+    "slot",
+    "phantom",  # stale: no class has a phantom param or attribute
+)
+
+_ERROR_CONTEXT_EXCLUDED = ()
+
+
+class AlphaError(Exception):
+    def __init__(self, message: str, *, slot: int | None = None, depth: int = 0):
+        super().__init__(message)
+        self.slot = slot
+        self.depth = depth  # scalar, neither whitelisted nor excluded
+
+
+class BetaError(Exception):
+    def __init__(self, message: str, code):  # second required positional
+        super().__init__(message)
+        self.code = code

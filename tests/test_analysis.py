@@ -1,0 +1,262 @@
+"""repro.analysis: each rule catches its fixture, fingerprints are
+stable, suppression works, and the shipped baseline is consistent.
+
+The fixture corpus under ``tests/analysis_fixtures/`` holds one
+known-bad file per rule; each test re-points that rule's config at its
+fixture and asserts the *exact* set of findings — so a rule that stops
+firing (or starts over-firing) fails here before it silently rots.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    AnalysisConfig,
+    Finding,
+    apply_baseline,
+    load_baseline,
+    run,
+)
+from repro.analysis import (
+    rules_faults,
+    rules_locks,
+    rules_metrics,
+    rules_recompile,
+    rules_trace,
+    rules_wire,
+)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = REPO_ROOT / "tests" / "analysis_fixtures"
+NAMES_REL = "src/repro/obs/names.py"
+
+
+def fixture_config(**over) -> AnalysisConfig:
+    files = sorted(FIXTURES.glob("bad_*.py")) + [REPO_ROOT / NAMES_REL]
+    base = dict(
+        root=REPO_ROOT,
+        files=files,
+        trace_files=[],
+        dispatch_files=[],
+        recompile_files=[],
+        lock_files=[],
+        faults_file="",
+        test_files=[],
+        names_file=NAMES_REL,
+        metric_ref_files=[],
+        wire_file="",
+        errors_file="",
+    )
+    base.update(over)
+    return AnalysisConfig(**base)
+
+
+def _summaries(findings):
+    return sorted((f.rule, f.scope, f.message.split(" (")[0]) for f in findings)
+
+
+# ------------------------------------------------------------------ #
+# Per-rule fixture coverage
+# ------------------------------------------------------------------ #
+def test_r1_trace_purity_catches_fixture():
+    rel = "tests/analysis_fixtures/bad_trace.py"
+    cfg = fixture_config(trace_files=[rel], dispatch_files=[rel])
+    found = run(cfg, rules=[rules_trace])
+    assert all(f.rule == "R1" and f.path == rel for f in found)
+    messages = sorted(f.message for f in found)
+    assert len(found) == 5, messages
+    assert sum("`if` on a traced value" in m for m in messages) == 1
+    assert sum("np.abs() on a traced array" in m for m in messages) == 1
+    assert sum("float() coerces" in m for m in messages) == 1
+    assert sum(".item() forces a host sync" in m for m in messages) == 1
+    assert sum("before dispatch" in m for m in messages) == 1
+    # the static uses (x.shape, the plain-int branch, the post-dispatch
+    # readback) must NOT appear
+    lines = {f.line for f in found}
+    src = (REPO_ROOT / rel).read_text().splitlines()
+    for i, text in enumerate(src, 1):
+        if "must NOT flag" in text or "post-dispatch" in text:
+            assert i not in lines, text
+
+
+def test_r2_recompile_hazard_catches_fixture():
+    rel = "tests/analysis_fixtures/bad_recompile.py"
+    cfg = fixture_config(recompile_files=[rel])
+    found = run(cfg, rules=[rules_recompile])
+    leaked = sorted(f.message.split("self.")[1].split(" ")[0] for f in found)
+    assert leaked == ["chunk", "window"]  # mode is keyed, mesh is aliased
+    assert all(
+        f.rule == "R2" and f.scope == "LeakyPlanner.build_executor"
+        for f in found
+    )
+
+
+def test_r3_lock_discipline_catches_fixture():
+    rel = "tests/analysis_fixtures/bad_locks.py"
+    cfg = fixture_config(lock_files=[rel])
+    found = run(cfg, rules=[rules_locks])
+    assert _summaries(found) == [
+        ("R3", "Box.bad_io_under_lock", "blocking call send_msg() while holding _lock"),
+        ("R3", "Box.bad_requires_call", "self._helper() requires-lock _lock but is called without it"),
+        ("R3", "Box.bad_unlocked", "self._items is guarded-by _lock but accessed without it"),
+    ]
+
+
+def test_r4_fault_sites_catches_fixture():
+    rel = "tests/analysis_fixtures/bad_faults.py"
+    # The fixture doubles as its own "test file": its inject("compile")
+    # literal covers that site, leaving ghost_town untested.
+    cfg = fixture_config(faults_file=rel, test_files=[rel])
+    found = run(cfg, rules=[rules_faults])
+    messages = sorted(f.message for f in found)
+    assert len(found) == 3, messages
+    assert sum("'dispatchh' is not declared" in m for m in messages) == 1
+    assert sum("'poisonn' is not declared" in m for m in messages) == 1
+    assert sum("'ghost_town' is declared but no test" in m for m in messages) == 1
+
+
+def test_r5_metric_names_catches_fixture():
+    rel = "tests/analysis_fixtures/bad_metrics.py"
+    cfg = fixture_config(metric_ref_files=[rel])
+    found = run(cfg, rules=[rules_metrics])
+    names = sorted(f.message.split("'")[1] for f in found)
+    assert names == [
+        "peel_device_time_ms",
+        "replica_requests_servd",
+        "requests_servd",
+    ]
+
+
+def test_r6_wire_schema_catches_fixture():
+    rel = "tests/analysis_fixtures/bad_wire.py"
+    cfg = fixture_config(wire_file=rel, errors_file=rel)
+    found = run(cfg, rules=[rules_wire])
+    messages = sorted(f.message for f in found)
+    assert len(found) == 3, messages
+    assert sum("'phantom' matches no parameter" in m for m in messages) == 1
+    assert sum("'depth' is neither" in m for m in messages) == 1
+    assert sum("BetaError is not constructible" in m for m in messages) == 1
+
+
+# ------------------------------------------------------------------ #
+# Engine mechanics
+# ------------------------------------------------------------------ #
+def test_fingerprints_are_line_independent_and_occurrence_stable():
+    a = Finding("R1", "p.py", 10, "f", "msg", "snippet x")
+    b = Finding("R1", "p.py", 99, "f", "msg", "snippet x")
+    assert a.fingerprint == b.fingerprint  # line moves don't churn
+    c = Finding("R1", "p.py", 99, "f", "msg", "snippet x", occurrence=1)
+    d = Finding("R1", "p.py", 99, "g", "msg", "snippet x")
+    assert len({a.fingerprint, c.fingerprint, d.fingerprint}) == 3
+
+
+def _tmp_metrics_config(tmp_path, name, source):
+    """Config rooted at tmp_path: one bad file + a copy of the registry."""
+    bad = tmp_path / name
+    bad.write_text(source)
+    names = tmp_path / NAMES_REL
+    names.parent.mkdir(parents=True, exist_ok=True)
+    names.write_text((REPO_ROOT / NAMES_REL).read_text())
+    return fixture_config(
+        root=tmp_path, files=[bad, names], metric_ref_files=[name]
+    )
+
+
+def test_inline_suppression_silences_one_line(tmp_path):
+    cfg = _tmp_metrics_config(
+        tmp_path,
+        "sup.py",
+        "def work(m):\n"
+        '    m.inc("not_a_metric_a")\n'
+        '    m.inc("not_a_metric_b")  # trusslint: disable=R5\n',
+    )
+    found = run(cfg, rules=[rules_metrics])
+    assert [f.message.split("'")[1] for f in found] == ["not_a_metric_a"]
+
+
+def test_occurrence_index_disambiguates_identical_lines(tmp_path):
+    cfg = _tmp_metrics_config(
+        tmp_path,
+        "twice.py",
+        "def work(m):\n"
+        '    m.inc("nope")\n'
+        '    m.inc("nope")\n',
+    )
+    found = run(cfg, rules=[rules_metrics])
+    assert len(found) == 2
+    assert sorted(f.occurrence for f in found) == [0, 1]
+    assert found[0].fingerprint != found[1].fingerprint
+
+
+# ------------------------------------------------------------------ #
+# The real tree and its baseline
+# ------------------------------------------------------------------ #
+def test_repo_is_clean_against_checked_in_baseline():
+    cfg = AnalysisConfig.default(REPO_ROOT)
+    findings = run(cfg)
+    baseline = load_baseline(REPO_ROOT / "analysis" / "baseline.json")
+    new, _old, stale = apply_baseline(findings, baseline)
+    assert not new, [f.to_dict() for f in new]
+    assert not stale, sorted(stale)
+
+
+def test_baseline_file_is_well_formed_and_empty():
+    """The dispatch-path and serve layers ship lint-clean: the baseline
+    exists (CI depends on it) and grandfathers nothing."""
+    data = json.loads((REPO_ROOT / "analysis" / "baseline.json").read_text())
+    assert data["version"] == 1
+    assert data["findings"] == []
+
+
+def test_cli_reports_and_exits_zero(tmp_path):
+    report = tmp_path / "ANALYSIS_report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--report", str(report)],
+        cwd=REPO_ROOT,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(report.read_text())
+    assert data["counts"]["new"] == 0
+    assert data["counts"]["stale_baseline"] == 0
+    assert data["files_scanned"] > 20
+
+
+def test_default_config_excludes_the_fixture_corpus():
+    cfg = AnalysisConfig.default(REPO_ROOT)
+    rels = {p.relative_to(REPO_ROOT).as_posix() for p in cfg.files}
+    assert not any(r.startswith("tests/analysis_fixtures/") for r in rels)
+    assert NAMES_REL in rels
+
+
+# ------------------------------------------------------------------ #
+# Recompile sentinel (runtime half of R2)
+# ------------------------------------------------------------------ #
+def test_sentinel_counts_cold_compile_and_warm_silence():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.sentinel import assert_no_compiles, count_compiles
+
+    @jax.jit
+    def f(x):
+        return x * 2 + 1
+
+    x = jnp.arange(7)
+    with count_compiles() as log:
+        f(x).block_until_ready()
+    assert log.compiles >= 1  # cold call compiled
+
+    with assert_no_compiles("warm jit call"):
+        f(x).block_until_ready()
+
+    with pytest.raises(AssertionError, match="warm"):
+        with assert_no_compiles("warm (sic) call"):
+            f(jnp.arange(11)).block_until_ready()  # new shape -> recompile

@@ -61,6 +61,30 @@ def test_backend_parity_bit_identical(backend):
         assert dec.kmax == int(oracle.max(initial=0))
 
 
+@pytest.mark.parametrize(
+    "backend", available_backends(), ids=[str(k) for k in available_backends()]
+)
+def test_warm_path_compiles_nothing(backend):
+    """The runtime half of the R2 recompile lint: an identical query mix
+    re-solved on a live session must hit the compile cache exactly — zero
+    XLA compilations on the warm pass.  A failure here means some
+    attribute the executor builder closes over leaked out of the
+    compile-cache variant key (see ``Planner.cache_variant``)."""
+    from repro.analysis.sentinel import assert_no_compiles
+
+    s = Session(backend=backend, chunk=64, max_batch=2)
+    gs = [rmat(6, 4, seed=3), erdos(40, 3.0, seed=1)]
+
+    def mix():
+        return s.solve([TrussQuery.decompose(g) for g in gs])
+
+    cold = mix()
+    with assert_no_compiles(f"warm solve on {backend}"):
+        warm = mix()
+    for c, w in zip(cold, warm):
+        assert np.array_equal(c.trussness, w.trussness)
+
+
 # ------------------------------------------------------------------ #
 # (b) API surface snapshot
 # ------------------------------------------------------------------ #

@@ -320,7 +320,7 @@ else:
     s = Session(backend="fine/fused/aligned", chunk=64, max_batch=1,
                 cache_dir=cache_dir)
     variant = s.planner.cache_variant(s.planner.backend, bucket, 1)
-    print(f"PERSIST_VARIANT_SIG={variant[3]}")
+    print(f"PERSIST_VARIANT_SIG={variant[-1]}")
     from repro.core import trussness_numpy
 
     dec = s.solve([TrussQuery.decompose(g)])[0]

@@ -315,14 +315,47 @@ def test_service_package_import_is_warning_free():
 # --------------------------------------------------------------------- #
 # Registry mechanics the wiring relies on
 # --------------------------------------------------------------------- #
+def test_metric_key_escaping_roundtrips_hostile_labels():
+    """Label values containing the key format's own separators — commas,
+    equals signs, backslashes — must survive the fmt/parse roundtrip
+    byte-exact, not shift into neighbouring labels."""
+    from repro.obs.metrics import _fmt_key, _label_key, _parse_key
+
+    hostile = {
+        "graph": "road,usa=west\\v2",
+        "note": "a=b,c=d",
+        "plain": "fine",
+        "trail": "ends with backslash\\",
+    }
+    key = _fmt_key("requests_served", _label_key(hostile))
+    name, labels = _parse_key(key)
+    assert name == "requests_served"
+    assert labels == hostile
+
+    # legacy unescaped keys (pre-escaping snapshots) still parse
+    name, labels = _parse_key("cache_bucket_hits{bucket=b64x2}")
+    assert name == "cache_bucket_hits" and labels == {"bucket": "b64x2"}
+
+
+def test_registry_escaped_labels_are_distinct_series():
+    """Two label sets that would collide without escaping stay separate."""
+    r = obs.MetricsRegistry()
+    r.inc("requests_served", 1, graph="a,b", note="c")
+    r.inc("requests_served", 5, graph="a", note="b,c")
+    assert r.value("requests_served", graph="a,b", note="c") == 1
+    assert r.value("requests_served", graph="a", note="b,c") == 5
+    counters = r.snapshot()["counters"]
+    assert sum(v for k, v in counters.items() if k.startswith("requests_served{")) == 6
+
+
 def test_registry_parent_chaining():
     parent = obs.MetricsRegistry()
     child = obs.MetricsRegistry(parent=parent)
-    child.inc("x", 2, where="here")
-    assert child.value("x", where="here") == 2
-    assert parent.value("x", where="here") == 2  # propagated up
-    parent.inc("x", 1, where="here")
-    assert child.value("x", where="here") == 2  # isolation downward
+    child.inc("x", 2, where="here")  # trusslint: disable=R5
+    assert child.value("x", where="here") == 2  # trusslint: disable=R5
+    assert parent.value("x", where="here") == 2  # propagated up; trusslint: disable=R5
+    parent.inc("x", 1, where="here")  # trusslint: disable=R5
+    assert child.value("x", where="here") == 2  # isolation downward; trusslint: disable=R5
 
 
 def test_session_metrics_chain_to_global(graphs):

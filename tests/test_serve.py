@@ -338,6 +338,66 @@ def test_router_quarantine_reports_orphaned_streams():
     assert r.quarantine("r0") == ()  # idempotent
 
 
+def test_network_fault_site_raises_typed_device_error():
+    """The ``network`` site fires inside ``ReplicaHandle.rpc`` before any
+    socket is opened, so chaos storms can break connections on demand."""
+    from repro.errors import DeviceError
+    from repro.resilience import FaultPlan, FaultSpec, use_plan
+
+    handle = ReplicaHandle("r0", "127.0.0.1", 1)  # never actually connects
+    with use_plan(FaultPlan([FaultSpec("network", times=1)])):
+        with pytest.raises(DeviceError) as ei:
+            handle.ping()
+        assert ei.value.site == "network" and ei.value.injected
+        assert handle._sock is None  # fault fired pre-connect
+
+
+class _NetFlakyHandle(_StubHandle):
+    """Stub whose submit passes through the real ``network`` fault site."""
+
+    def submit(self, qmsg):
+        from repro.resilience import inject
+
+        inject("network", replica=self.name, op="submit")
+        return super().submit(qmsg)
+
+
+def test_router_reroutes_around_injected_network_fault():
+    from repro.resilience import FaultPlan, FaultSpec, use_plan
+
+    g = erdos(30, 3.0, seed=5)
+    q = TrussQuery.decompose(g)
+    r = Router(
+        [_NetFlakyHandle("r0"), _NetFlakyHandle("r1")], max_health_fails=1
+    )
+    plan = FaultPlan(
+        [FaultSpec("network", times=1, where=(("replica", "r0"),))]
+    )
+    with use_plan(plan):
+        routed = r.submit(q, {"op": "submit"})
+    # The injected connection failure quarantined r0 and the query
+    # re-routed to the survivor — the affinity map follows.
+    assert routed.replica.name == "r1"
+    assert r.is_quarantined("r0")
+    assert plan.fired("network") == 1
+
+
+def test_replica_kill_is_a_pure_action_site():
+    """``replica_kill`` must *return* its fired spec, never raise: the
+    fleet monitor polls it each tick and performs the kill itself."""
+    from repro.resilience import FaultPlan, FaultSpec, inject, use_plan
+
+    plan = FaultPlan(
+        [FaultSpec("replica_kill", times=1, where=(("replica", "r1"),))]
+    )
+    with use_plan(plan):
+        assert inject("replica_kill", replica="r0") is None  # no match
+        spec = inject("replica_kill", replica="r1")
+        assert spec is not None and spec.site == "replica_kill"
+        assert inject("replica_kill", replica="r1") is None  # times=1 spent
+    assert plan.fired("replica_kill") == 1
+
+
 def test_router_ingests_replica_counters():
     h0 = _StubHandle(
         "r0", report=_report("r0", queries_shed=4, requests_served=11)
